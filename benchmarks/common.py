@@ -1,0 +1,67 @@
+"""Shared benchmark fixtures: Table-I-matched corpora, embeddings, queries,
+timing, and data-structure memory accounting (the paper's footprint
+metric)."""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.core import (EmbeddingSimilarity, KoiosIndex, KoiosSearch,
+                        SearchParams)
+from repro.data import dataset_preset, make_embeddings, sample_queries
+
+# CPU-feasible scales of the paper's four datasets (full stats in
+# repro.data.PRESETS; EXPERIMENTS.md reports the scale factors).
+BENCH_SCALES = {"dblp": 0.05, "opendata": 0.02, "twitter": 0.015,
+                "wdc": 0.002}
+EMB_DIM = 32
+
+
+@functools.lru_cache(maxsize=None)
+def world(dataset: str, scale: float | None = None, dim: int = EMB_DIM,
+          seed: int = 0):
+    scale = BENCH_SCALES[dataset] if scale is None else scale
+    coll = dataset_preset(dataset, scale=scale, seed=seed)
+    emb = make_embeddings(coll.vocab_size, dim=dim, seed=seed)
+    sim = EmbeddingSimilarity(emb)
+    return coll, sim
+
+
+@functools.lru_cache(maxsize=None)
+def index_for(dataset: str):
+    coll, sim = world(dataset)
+    return KoiosIndex.build(coll)
+
+
+def queries_for(dataset: str, n: int = 3, seed: int = 1):
+    coll, _ = world(dataset)
+    return sample_queries(coll, n, seed=seed)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0
+
+
+def memory_footprint_bytes(dataset: str, nq: int) -> dict:
+    """Deterministic data-structure footprint (paper §VIII-D): inverted
+    index + per-set filter state + bitmasks for a |Q|=nq query."""
+    coll, _ = world(dataset)
+    inv = index_for(dataset).inv
+    n = coll.num_sets
+    q_words = max(1, -(-nq // 32))
+    state = n * (4 + 4 + 4 + 4 + 1 + 1)        # S,l,T,d,seen,alive
+    masks = 2 * n * q_words * 4                # qmatched/qseen
+    slots = coll.total_tokens                  # slot_matched
+    return {
+        "inverted_index": inv.memory_bytes(),
+        "filter_state": state + masks + slots,
+        "total": inv.memory_bytes() + state + masks + slots,
+    }
+
+
+def csv_line(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,77 @@
+"""Kernel microbenchmarks: us/call of the Pallas kernels (interpret mode on
+CPU — correctness-path timing; TPU wall-times come from the roofline
+analysis) and their jnp oracles."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (auction_topk2, auction_topk2_ref, cosine_topk,
+                           cosine_topk_ref, ssd, ssd_ref)
+
+from .common import csv_line
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)                     # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+        else x, out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def main():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    qe = rng.normal(size=(16, 64)).astype(np.float32)
+    ev = rng.normal(size=(2048, 64)).astype(np.float32)
+    qe /= np.linalg.norm(qe, axis=1, keepdims=True)
+    ev /= np.linalg.norm(ev, axis=1, keepdims=True)
+    rows.append(("cosine_topk_interp",
+                 _time(lambda: cosine_topk(qe, ev, k=16, bv=256)),
+                 "nq=16 nv=2048 d=64 k=16"))
+    rows.append(("cosine_topk_ref",
+                 _time(lambda: cosine_topk_ref(jnp.asarray(qe),
+                                               jnp.asarray(ev), 16)),
+                 "jnp oracle"))
+
+    wm = rng.random((256, 512)).astype(np.float32)
+    pr = rng.random(512).astype(np.float32)
+    rows.append(("auction_topk2_interp",
+                 _time(lambda: auction_topk2(wm, pr, bn=128)),
+                 "n=256 m=512"))
+    rows.append(("auction_topk2_ref",
+                 _time(lambda: auction_topk2_ref(jnp.asarray(wm),
+                                                 jnp.asarray(pr))),
+                 "jnp oracle"))
+
+    Bt, L, H, P, G, S = 1, 64, 4, 16, 1, 16
+    x = rng.normal(size=(Bt, L, H, P)).astype(np.float32)
+    dt = np.log1p(np.exp(rng.normal(size=(Bt, L, H)))).astype(np.float32)
+    A = (-np.exp(rng.normal(size=H))).astype(np.float32)
+    B = (rng.normal(size=(Bt, L, G, S)) / 4).astype(np.float32)
+    C = (rng.normal(size=(Bt, L, G, S)) / 4).astype(np.float32)
+    D = rng.normal(size=H).astype(np.float32)
+    rows.append(("ssd_interp",
+                 _time(lambda: ssd(x, dt, A, B, C, D, chunk=16)),
+                 f"B={Bt} L={L} H={H} P={P} S={S}"))
+    rows.append(("ssd_ref",
+                 _time(lambda: ssd_ref(jnp.asarray(x[0]), jnp.asarray(dt[0]),
+                                       jnp.asarray(A), jnp.asarray(B[0]),
+                                       jnp.asarray(C[0]), jnp.asarray(D))),
+                 "sequential oracle"))
+
+    for name, us, derived in rows:
+        print(csv_line(name, us, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

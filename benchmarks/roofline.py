@@ -1,0 +1,74 @@
+"""Render the §Roofline table from the dry-run JSON records
+(experiments/dryrun/*.json): per (arch x shape) the three roofline terms,
+the dominant bottleneck, MODEL_FLOPS ratio, and memory fit."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HBM_PER_CHIP = 16e9      # v5e
+
+
+def load(dry_dir="experiments/dryrun", mesh="single"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, f"*_{mesh}.json"))):
+        r = json.load(open(path))
+        rows.append(r)
+    return rows
+
+
+def table(dry_dir="experiments/dryrun"):
+    out = []
+    for r in load(dry_dir):
+        base = {"arch": r["arch"], "shape": r["shape"],
+                "status": r["status"]}
+        if r["status"] == "skipped":
+            base["note"] = r["reason"]
+            out.append(base)
+            continue
+        if r["status"] == "error":
+            base["note"] = r.get("error", "")[:80]
+            out.append(base)
+            continue
+        rf = r.get("roofline", {})
+        mem = r["production"]["memory"]
+        base.update({
+            "compute_s": rf.get("compute_s"),
+            "memory_s": rf.get("memory_s"),
+            "collective_s": rf.get("collective_s"),
+            "bottleneck": rf.get("bottleneck"),
+            "roofline_fraction": rf.get("roofline_fraction"),
+            "useful_ratio": rf.get("useful_compute_ratio"),
+            "model_flops_G": (rf.get("model_flops_global", 0) / 1e9),
+            "arg_gb": mem["argument_bytes"] / 1e9,
+            "fits_hbm": (mem["argument_bytes"] + mem["output_bytes"])
+            < HBM_PER_CHIP,
+            "compile_s": r.get("compile_s"),
+        })
+        out.append(base)
+    return out
+
+
+def main():
+    rows = table()
+    hdr = ("arch,shape,status,bottleneck,compute_s,memory_s,collective_s,"
+           "roofline_frac,useful_ratio,arg_GB,compile_s")
+    print(hdr)
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']},{r['shape']},{r['status']},"
+                  f"{r.get('note','')}")
+            continue
+
+        def f(x, p=4):
+            return "" if x is None else f"{x:.{p}f}"
+        print(f"{r['arch']},{r['shape']},{r['status']},{r['bottleneck']},"
+              f"{f(r['compute_s'])},{f(r['memory_s'])},"
+              f"{f(r['collective_s'])},{f(r['roofline_fraction'],3)},"
+              f"{f(r['useful_ratio'],3)},{f(r['arg_gb'],2)},"
+              f"{r['compile_s']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Semantic join discovery (paper §I): find joinable table columns whose
+*values* are semantically related even when they never match exactly —
+the BigApple/NewYorkCity scenario of the paper's Fig. 1.
+
+We model a data lake as columns = token sets.  A clean "city names" query
+column is searched against (a) an exact copy, (b) a dirty copy (synonyms:
+tokens replaced by same-cluster neighbours), (c) unrelated columns.
+Vanilla overlap ranks the dirty copy poorly; semantic overlap recovers it.
+
+    PYTHONPATH=src python examples/semantic_join.py
+"""
+import numpy as np
+
+from repro.core import (EmbeddingSimilarity, KoiosSearch, SearchParams,
+                        SetCollection)
+from repro.data import make_embeddings
+
+rng = np.random.default_rng(0)
+VOCAB, DIM = 3000, 64
+table = make_embeddings(VOCAB, dim=DIM, cluster_size=4.0, intra_cos=0.9,
+                        seed=0)
+sim = EmbeddingSimilarity(table)
+
+# synonym map: nearest same-cluster neighbour >= 0.8
+sims = table @ table.T
+np.fill_diagonal(sims, 0)
+synonym = sims.argmax(1)
+has_syn = sims.max(1) >= 0.8
+
+query_col = rng.choice(VOCAB, size=24, replace=False)
+
+columns = []
+labels = []
+# (a) exact duplicate
+columns.append(query_col.copy())
+labels.append("exact duplicate")
+# (b) dirty copies: 60% of values replaced by synonyms, rest exact
+for frac, name in [(0.4, "dirty copy (40% synonyms)"),
+                   (0.8, "dirty copy (80% synonyms)")]:
+    col = query_col.copy()
+    swap = rng.random(len(col)) < frac
+    col[swap & has_syn[col]] = synonym[col][swap & has_syn[col]]
+    columns.append(np.unique(col))
+    labels.append(name)
+# (c) unrelated columns
+for i in range(40):
+    columns.append(rng.choice(VOCAB, size=rng.integers(10, 30),
+                              replace=False))
+    labels.append(f"random column {i}")
+
+indptr = np.zeros(len(columns) + 1, np.int64)
+np.cumsum([len(c) for c in columns], out=indptr[1:])
+coll = SetCollection(indptr, np.concatenate(columns).astype(np.int32),
+                     VOCAB)
+
+engine = KoiosSearch(coll, sim, SearchParams(k=5, alpha=0.8))
+res = engine.search(query_col)
+
+print(f"query column: {len(query_col)} values")
+print("top-5 joinable columns by SEMANTIC overlap:")
+for sid, score in zip(res.ids, res.lb):
+    vanilla = len(np.intersect1d(query_col, coll.get_set(int(sid))))
+    print(f"  {labels[sid]:28s} SO={score:5.2f}  vanilla={vanilla}")
+print("\n(vanilla overlap alone would rank the dirty copies below any "
+      "random column with a lucky exact match — semantic overlap "
+      "recovers them, the paper's §I example)")

@@ -1,0 +1,4 @@
+from .checkpoint import AsyncSaver, restore, save
+from .manager import CheckpointManager
+
+__all__ = ["save", "restore", "AsyncSaver", "CheckpointManager"]

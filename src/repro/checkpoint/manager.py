@@ -1,0 +1,66 @@
+"""Rolling checkpoint manager: step-numbered checkpoints + metadata,
+restore-latest, retention, preemption safety (restart resumes mid-run)."""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+from .checkpoint import AsyncSaver, restore, save
+
+_PAT = re.compile(r"ckpt_(\d+)\.zst$")
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._saver = AsyncSaver() if async_save else None
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:09d}.zst")
+
+    def steps(self):
+        out = []
+        for f in os.listdir(self.dir):
+            m = _PAT.match(f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def save(self, step: int, tree: Any, metadata: Optional[dict] = None):
+        meta = dict(metadata or {})
+        meta["step"] = step
+        payload = {"meta": meta, "state": tree}
+        if self._saver is not None:
+            self._saver.save(self._path(step), payload)
+        else:
+            save(self._path(step), payload)
+        self._gc()
+
+    def restore_latest(self):
+        """Returns (step, state, meta) or None."""
+        step = self.latest_step()
+        if step is None:
+            return None
+        self.wait()
+        payload = restore(self._path(step))
+        return step, payload["state"], payload["meta"]
+
+    def wait(self):
+        if self._saver is not None:
+            self._saver.wait()
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            try:
+                os.unlink(self._path(s))
+            except OSError:
+                pass

@@ -1,0 +1,3 @@
+from .registry import ARCHS, get_config, get_smoke_config, list_archs
+
+__all__ = ["ARCHS", "get_config", "get_smoke_config", "list_archs"]

@@ -1,0 +1,35 @@
+"""deepseek-v3-671b [moe] — MLA, 1 shared + 256 routed top-8, MTP.
+
+Assigned: 61L d_model=7168 128H (GQA kv=128) d_ff=2048 vocab=129280,
+MoE 256e top-8.  [arXiv:2412.19437; hf]
+
+Mapping notes:
+ * d_ff=2048 in the assignment is the *routed expert* width; the first 3
+   layers are dense with the published d_ff=18432 (cfg.d_ff), remaining 58
+   are MoE with one shared expert (DeepSeek-V3 table 1).
+ * Attention is MLA (q_lora 1536 / kv_lora 512 / nope 128 / rope 64 /
+   v 128); decode uses the absorbed MQA-over-latent form (models/mla.py).
+ * MTP (multi-token prediction) is a training-objective head; it is off for
+   the roofline runs so MODEL_FLOPS matches 6*N_active*D accounting
+   (DESIGN.md §4)."""
+from repro.models import MLAConfig, MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b", family="moe", num_layers=61, d_model=7168,
+    num_heads=128, num_kv_heads=128, d_ff=18432, vocab_size=129280,
+    head_dim=128,
+    moe=MoEConfig(num_experts=256, top_k=8, d_ff_expert=2048, num_shared=1,
+                  first_dense_layers=3, router_renorm=True),
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, qk_nope_dim=128,
+                  qk_rope_dim=64, v_dim=128))
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-smoke", family="moe", num_layers=3, d_model=64,
+        num_heads=4, num_kv_heads=4, d_ff=160, vocab_size=512, head_dim=16,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=32, num_shared=1,
+                      first_dense_layers=1),
+        mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16,
+                      qk_rope_dim=8, v_dim=16),
+        dtype="float32", remat="none")

@@ -1,0 +1,16 @@
+"""granite-34b [dense] — llama-arch, code; MQA (kv=1).
+
+Assigned: 88L d_model=6144 48H (GQA kv=1) d_ff=24576 vocab=49152.
+[arXiv:2405.04324; hf]"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b", family="dense", num_layers=88, d_model=6144,
+    num_heads=48, num_kv_heads=1, d_ff=24576, vocab_size=49152)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-smoke", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=1, d_ff=128, vocab_size=512,
+        dtype="float32", remat="none")

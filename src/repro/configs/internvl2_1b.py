@@ -1,0 +1,22 @@
+"""internvl2-1b [vlm] — InternViT + Qwen2-0.5B backbone.
+
+Assigned: 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655.
+[arXiv:2404.16821; hf]
+
+Per the assignment the modality frontend is a STUB: input_specs() provides
+precomputed ViT patch embeddings (batch, 1024, d_model) prepended to the
+text tokens; loss/logits cover the text region."""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b", family="vlm", num_layers=24, d_model=896,
+    num_heads=14, num_kv_heads=2, d_ff=4864, vocab_size=151655,
+    tie_embeddings=True, frontend="vision", frontend_len=1024)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-smoke", family="vlm", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=512,
+        tie_embeddings=True, frontend="vision", frontend_len=8,
+        dtype="float32", remat="none")

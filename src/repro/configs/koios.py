@@ -1,0 +1,8 @@
+"""The paper's own configuration: KOIOS search defaults (§VIII-A3) and the
+Table-I dataset presets.  See repro.core.SearchParams / repro.data.PRESETS."""
+from repro.core import SearchParams
+from repro.data import PRESETS  # noqa: F401  (re-export)
+
+# alpha=0.8, k=10, partitions=10 — the defaults of every paper experiment
+SEARCH_DEFAULTS = SearchParams(k=10, alpha=0.8)
+PARTITIONS = 10

@@ -1,0 +1,25 @@
+"""llama4-scout-17b-a16e [moe] — MoE top-1 + shared expert, early fusion.
+
+Assigned: 48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048,
+MoE 16e top-1.  [hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+
+Every layer is MoE (16 routed experts, top-1) plus one always-on shared
+expert of the same width (Scout's A16E layout).  Early-fusion multimodality
+is out of the assigned backbone scope (text path only)."""
+from repro.models import MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e", family="moe", num_layers=48, d_model=5120,
+    num_heads=40, num_kv_heads=8, d_ff=8192, vocab_size=202048,
+    head_dim=128,
+    moe=MoEConfig(num_experts=16, top_k=1, d_ff_expert=8192, num_shared=1,
+                  first_dense_layers=0, router_renorm=False))
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-smoke", family="moe", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=512, head_dim=16,
+        moe=MoEConfig(num_experts=4, top_k=1, d_ff_expert=32, num_shared=1,
+                      router_renorm=False),
+        dtype="float32", remat="none")

@@ -1,0 +1,22 @@
+"""mamba2-130m [ssm] — SSD (state-space duality), attention-free.
+
+Assigned: 24L d_model=768 (attn-free) d_ff=0 vocab=50280, ssm_state=128.
+[arXiv:2405.21060; unverified]"""
+from repro.models import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m", family="ssm", num_layers=24, d_model=768,
+    num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=50280,
+    ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, ngroups=1,
+                  conv_width=4, chunk=128),
+    tie_embeddings=True, subquadratic=True)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-smoke", family="ssm", num_layers=2, d_model=64,
+        num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=512,
+        ssm=SSMConfig(state_dim=8, head_dim=16, expand=2, ngroups=1,
+                      conv_width=4, chunk=8),
+        tie_embeddings=True, subquadratic=True, dtype="float32",
+        remat="none")

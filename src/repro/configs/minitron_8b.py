@@ -1,0 +1,16 @@
+"""minitron-8b [dense] — pruned nemotron; huge vocab.
+
+Assigned: 32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000.
+[arXiv:2407.14679; hf]"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b", family="dense", num_layers=32, d_model=4096,
+    num_heads=32, num_kv_heads=8, d_ff=16384, vocab_size=256000)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-smoke", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=1024,
+        dtype="float32", remat="none")

@@ -1,0 +1,35 @@
+"""Architecture registry: --arch <id> -> config module."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    "zamba2-2.7b": "zamba2_2p7b",
+    "tinyllama-1.1b": "tinyllama_1p1b",
+    "granite-34b": "granite_34b",
+    "minitron-8b": "minitron_8b",
+    "qwen3-8b": "qwen3_8b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "mamba2-130m": "mamba2_130m",
+    "internvl2-1b": "internvl2_1b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+}
+
+
+def _module(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; choose from {list(ARCHS)}")
+    return importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+
+
+def get_config(arch: str):
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str):
+    return _module(arch).smoke_config()
+
+
+def list_archs():
+    return list(ARCHS)

@@ -1,0 +1,22 @@
+"""seamless-m4t-large-v2 [audio] — encoder-decoder, multimodal.
+
+Assigned: 24L d_model=1024 16H (GQA kv=16) d_ff=8192 vocab=256206.
+[arXiv:2308.11596; hf]
+
+24 encoder + 24 decoder layers at the assigned width (seamless large: 24L
+speech encoder / 24L text decoder).  The speech frontend is a STUB:
+input_specs() provides precomputed frame embeddings (batch, 1024, d_model)
+as encoder input."""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", family="audio", num_layers=24,
+    enc_layers=24, d_model=1024, num_heads=16, num_kv_heads=16, d_ff=8192,
+    vocab_size=256206, frontend="audio", frontend_len=1024)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-smoke", family="audio", num_layers=2, enc_layers=2,
+        d_model=64, num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=512,
+        frontend="audio", frontend_len=8, dtype="float32", remat="none")

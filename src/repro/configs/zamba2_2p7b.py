@@ -1,0 +1,35 @@
+"""zamba2-2.7b [hybrid] — Mamba2 + shared attention blocks.
+
+Assigned: 54L d_model=2560 32H (GQA kv=32) d_ff=10240 vocab=32000,
+ssm_state=64.  [arXiv:2411.15242; hf]
+
+Deviations (DESIGN.md §4): the original applies the shared block on
+concat(h, embedding) with per-invocation LoRA; we apply it on the residual
+stream with fully shared weights (structure + FLOP shape preserved at the
+assigned dimensions)."""
+from repro.models import HybridConfig, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, ngroups=1,
+                  conv_width=4, chunk=128),
+    hybrid=HybridConfig(attn_every=6, shared_weights=True),
+    subquadratic=True,       # mamba2 backbone: O(1)-state decode
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-smoke", family="hybrid", num_layers=4, d_model=64,
+        num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=512,
+        ssm=SSMConfig(state_dim=8, head_dim=16, expand=2, ngroups=1,
+                      conv_width=4, chunk=8),
+        hybrid=HybridConfig(attn_every=2), subquadratic=True,
+        dtype="float32", remat="none")

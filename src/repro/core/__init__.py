@@ -1,0 +1,22 @@
+"""KOIOS core — top-k semantic overlap set search (the paper's contribution).
+
+Public API:
+    SetCollection, SearchParams, SearchResult   (types)
+    EmbeddingSimilarity, NGramJaccardSimilarity (similarity providers)
+    KoiosSearch, KoiosIndex                     (search engine)
+    baseline_topk, baseline_plus_topk, brute_force_topk (paper baselines)
+"""
+from .types import SetCollection, SearchParams, SearchResult, SearchStats
+from .similarity import EmbeddingSimilarity, NGramJaccardSimilarity
+from .inverted_index import InvertedIndex
+from .token_stream import build_token_stream, expand_to_events
+from .search import KoiosSearch, KoiosIndex, search_partition, merge_topk
+from .baseline import baseline_topk, baseline_plus_topk, brute_force_topk
+
+__all__ = [
+    "SetCollection", "SearchParams", "SearchResult", "SearchStats",
+    "EmbeddingSimilarity", "NGramJaccardSimilarity", "InvertedIndex",
+    "build_token_stream", "expand_to_events",
+    "KoiosSearch", "KoiosIndex", "search_partition", "merge_topk",
+    "baseline_topk", "baseline_plus_topk", "brute_force_topk",
+]

@@ -1,0 +1,61 @@
+"""CSR inverted index I_s: vocabulary token -> sets containing it.
+
+The paper stores I_s as an in-memory hash map of posting lists.  The TPU
+adaptation is a CSR matrix over the token axis so a whole stream chunk's
+postings are fetched with one vectorized gather (DESIGN.md §2).
+
+``posting_set``  : set id of each posting
+``posting_slot`` : index of the posting *within the repository's flat token
+                   array* — this is the per-(set, element) slot used by the
+                   refinement phase to mark candidate-side elements as
+                   matched (the t-side occupancy of the greedy matching).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .types import SetCollection
+
+
+@dataclasses.dataclass(frozen=True)
+class InvertedIndex:
+    tok_indptr: np.ndarray    # (vocab+1,) int64
+    posting_set: np.ndarray   # (total_postings,) int32
+    posting_slot: np.ndarray  # (total_postings,) int64  (flat token-array slot)
+    vocab_size: int
+
+    @property
+    def total_postings(self) -> int:
+        return len(self.posting_set)
+
+    def postings(self, token: int):
+        lo, hi = self.tok_indptr[token], self.tok_indptr[token + 1]
+        return self.posting_set[lo:hi], self.posting_slot[lo:hi]
+
+    def posting_counts(self) -> np.ndarray:
+        return np.diff(self.tok_indptr)
+
+    @staticmethod
+    def build(coll: SetCollection) -> "InvertedIndex":
+        """O(total_tokens) counting-sort construction."""
+        tokens = coll.set_tokens.astype(np.int64)
+        order = np.argsort(tokens, kind="stable")
+        sorted_tokens = tokens[order]
+        counts = np.bincount(sorted_tokens, minlength=coll.vocab_size)
+        tok_indptr = np.zeros(coll.vocab_size + 1, dtype=np.int64)
+        np.cumsum(counts, out=tok_indptr[1:])
+        # set id of every flat slot
+        set_of_slot = np.repeat(
+            np.arange(coll.num_sets, dtype=np.int32), coll.set_sizes)
+        return InvertedIndex(
+            tok_indptr=tok_indptr,
+            posting_set=set_of_slot[order],
+            posting_slot=order,
+            vocab_size=coll.vocab_size,
+        )
+
+    def memory_bytes(self) -> int:
+        return (self.tok_indptr.nbytes + self.posting_set.nbytes
+                + self.posting_slot.nbytes)

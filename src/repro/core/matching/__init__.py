@@ -1,0 +1,15 @@
+from .greedy import greedy_matching_score, greedy_matching
+from .hungarian import hungarian_score, hungarian_batch
+from .auction import (auction_score_bounds, auction_batch, AuctionResult,
+                      make_eps_schedule)
+
+__all__ = [
+    "greedy_matching_score",
+    "greedy_matching",
+    "hungarian_score",
+    "hungarian_batch",
+    "auction_score_bounds",
+    "auction_batch",
+    "AuctionResult",
+    "make_eps_schedule",
+]

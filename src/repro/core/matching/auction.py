@@ -1,0 +1,192 @@
+"""Batched auction algorithm — the TPU-native exact verifier (DESIGN.md §2).
+
+The paper verifies candidates with the (sequential) Hungarian algorithm on a
+CPU thread pool and early-terminates a matching when the node-label sum (a
+*dual* upper bound) drops below theta_lb (Lemma 8).  On TPU we use Bertsekas'
+auction algorithm instead:
+
+  * every bidding round is dense, branch-free linear algebra (profit matrix,
+    per-row top-2, per-column max) — VPU/MXU work, `vmap`-able over a batch
+    of candidate sets;
+  * the auction maintains *prices* (dual variables); the dual objective
+        D = sum_j p_j + sum_i max(0, max_j (w_ij - p_j))
+    upper-bounds SO at every round (weak duality).  Lemma 8's early
+    termination falls out: abort the moment D < theta_lb;
+  * with eps-scaling down to eps_min, the final assignment's score P
+    satisfies  P >= SO - nq * eps_min,  so [P, min(D, P + nq*eps_min)] is a
+    valid (lb, ub) bracket for SO.  The search treats verification results as
+    brackets; brackets that straddle a decision threshold are re-verified
+    exactly (hungarian) — so the search stays exact.
+
+Matching is *optional* (Def. 1): a virtual null object with value 0 and
+permanent price 0 absorbs persons whose best profit is <= 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_NEG = jnp.float32(-1e30)
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["lb", "ub", "assign", "early_stopped", "rounds"],
+    meta_fields=[])
+@dataclasses.dataclass(frozen=True)
+class AuctionResult:
+    lb: jnp.ndarray          # (B,) primal score (== SO up to nq*eps)
+    ub: jnp.ndarray          # (B,) dual bound   (>= SO, always valid)
+    assign: jnp.ndarray      # (B, N) column per row; -1 unmatched/null
+    early_stopped: jnp.ndarray  # (B,) bool — aborted by theta_lb (Lemma 8)
+    rounds: jnp.ndarray      # (B,) int32 bidding rounds executed
+
+
+def _auction_single(w, nq, nc, eps_schedule, theta_lb, max_rounds):
+    """One padded weight matrix (N, M); logical sizes (nq, nc) <= (N, M).
+
+    Optional matching with nonnegative weights equals *perfect* matching on
+    the K x K zero-padded square matrix (K = max(N, M)): zero-weight edges
+    play the role of "unmatched".  The square/perfect form is what makes
+    eps-scaling sound — prices carry over between phases (Bertsekas) and
+    eps-CS + perfect assignment implies the final score is within K*eps of
+    SO.  (The asymmetric form with dummy sinks does NOT admit price
+    carryover; see tests/test_matching.py::test_auction_vs_scipy which
+    guards this.)  The dual objective
+        D = sum_j p_j + sum_i max_j (w_ij - p_j)
+    upper-bounds SO at every round for any nonneg prices (weak duality) —
+    this is the Lemma-8 early-termination bound.
+    """
+    N, M = w.shape
+    K = max(N, M)                    # square, zero-padded
+    rows = jnp.arange(K)
+    cols = jnp.arange(K)
+    row_valid = rows < nq
+    col_valid = cols < nc
+    wm = jnp.zeros((K, K), dtype=jnp.float32)
+    wm = wm.at[:N, :M].set(w.astype(jnp.float32))
+    wm = jnp.where(row_valid[:, None] & col_valid[None, :],
+                   jnp.maximum(wm, 0.0), 0.0)
+
+    def dual_bound(prices):
+        # D >= SO for any nonneg prices (weak duality); all entries finite.
+        profits = wm - prices[None, :]
+        best = jnp.max(profits, axis=1)
+        return jnp.sum(prices) + jnp.sum(jnp.maximum(best, 0.0))
+
+    def phase(carry, eps):
+        prices, ub_best, early, total_rounds = carry
+        # reset assignment, keep prices (standard eps-scaling)
+        assign0 = jnp.full((K,), -1, dtype=jnp.int32)
+        owner0 = jnp.full((K,), -1, dtype=jnp.int32)
+
+        def cond(s):
+            assign, owner, prices, ub_best, early, r = s
+            unfinished = jnp.any(assign == -1)
+            return unfinished & (~early) & (r < max_rounds)
+
+        def body(s):
+            assign, owner, prices, ub_best, early, r = s
+            profits = wm - prices[None, :]
+            w1 = jnp.max(profits, axis=1)
+            jstar = jnp.argmax(profits, axis=1).astype(jnp.int32)
+            second = jnp.where(cols[None, :] == jstar[:, None], _NEG, profits)
+            w2 = jnp.max(second, axis=1)
+            bidding = assign == -1
+            bid_val = w1 + prices[jstar] - w2 + eps   # = w[i,j*] - w2 + eps
+
+            # dense bid matrix: rows bid on their jstar only (gather-only
+            # conflict resolution — no duplicate-index scatters)
+            bid_mat = jnp.where(
+                bidding[:, None] & (cols[None, :] == jstar[:, None]),
+                bid_val[:, None], _NEG)
+            col_best = jnp.max(bid_mat, axis=0)
+            col_winner = jnp.argmax(bid_mat, axis=0).astype(jnp.int32)
+            has_bid = col_best > _NEG / 2
+
+            # eviction: person i loses its object if that object was re-awarded
+            cur_j = jnp.clip(assign, 0, K - 1)
+            holds = assign >= 0
+            evict = holds & has_bid[cur_j] & (col_winner[cur_j] != rows)
+
+            # award: person i wins iff it bid on jstar[i] and won the argmax
+            won = bidding & has_bid[jstar] & (col_winner[jstar] == rows)
+
+            assign = jnp.where(won, jstar,
+                               jnp.where(evict, jnp.int32(-1), assign))
+            owner = jnp.where(has_bid, col_winner, owner)
+            prices = jnp.where(has_bid, col_best, prices)
+
+            d = dual_bound(prices)
+            ub_best = jnp.minimum(ub_best, d)
+            early = early | (ub_best < theta_lb)
+            return assign, owner, prices, ub_best, early, r + 1
+
+        assign, owner, prices, ub_best, early, r = jax.lax.while_loop(
+            cond, body, (assign0, owner0, prices, ub_best, early,
+                         jnp.int32(0)))
+        converged = jnp.all(assign >= 0)
+        return (prices, ub_best, early, total_rounds + r), (assign, converged)
+
+    prices0 = jnp.zeros((K,), dtype=jnp.float32)
+    ub0 = dual_bound(prices0)
+    carry0 = (prices0, ub0, jnp.bool_(False), jnp.int32(0))
+    (prices, ub_best, early, rounds), (assigns, convs) = jax.lax.scan(
+        phase, carry0, eps_schedule)
+    assign, converged = assigns[-1], convs[-1]
+
+    matched = assign >= 0
+    gathered = wm[rows, jnp.clip(assign, 0, K - 1)]
+    lb = jnp.sum(jnp.where(matched, gathered, 0.0))
+    eps_final = eps_schedule[-1]
+    # eps-CS slack is one eps per person of the square problem (K of them).
+    ub = jnp.where(converged & ~early,
+                   jnp.minimum(ub_best, lb + jnp.float32(K) * eps_final),
+                   ub_best)
+    # an early-stopped element's lb is not meaningful; its ub < theta_lb is.
+    lb = jnp.where(early, 0.0, lb)
+    return lb, jnp.maximum(ub, lb), assign[:N], early, rounds
+
+
+def make_eps_schedule(eps_min: float, eps_start: float = 0.25,
+                      factor: float = 0.2) -> jnp.ndarray:
+    eps = []
+    e = eps_start
+    while e > eps_min:
+        eps.append(e)
+        e *= factor
+    eps.append(eps_min)
+    return jnp.asarray(eps, dtype=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("max_rounds",))
+def auction_batch(w, nq, nc, eps_schedule, theta_lb, max_rounds: int = 5000):
+    """Batched verification.
+
+    Args:
+      w: (B, N, M) padded weight matrices (alpha-thresholded, in [0, 1]).
+      nq, nc: (B,) logical sizes.
+      eps_schedule: (P,) descending epsilons from :func:`make_eps_schedule`.
+      theta_lb: scalar pruning threshold (Lemma 8); use -inf to disable.
+    Returns :class:`AuctionResult` of per-element score brackets.
+    """
+    fn = jax.vmap(
+        lambda wi, nqi, nci: _auction_single(
+            wi, nqi, nci, eps_schedule, theta_lb, max_rounds))
+    lb, ub, assign, early, rounds = fn(w, nq, nc)
+    return AuctionResult(lb=lb, ub=ub, assign=assign,
+                         early_stopped=early, rounds=rounds)
+
+
+def auction_score_bounds(w, eps_min: float = 1e-4, theta_lb: float = -1e30):
+    """Single-matrix convenience wrapper; returns (lb, ub)."""
+    w = jnp.asarray(w, dtype=jnp.float32)
+    nq = jnp.int32(w.shape[0])
+    nc = jnp.int32(w.shape[1])
+    res = auction_batch(w[None], nq[None], nc[None],
+                        make_eps_schedule(eps_min),
+                        jnp.float32(theta_lb))
+    return res.lb[0], res.ub[0]

@@ -1,0 +1,52 @@
+"""Greedy bipartite matching (Lemmas 3 & 5 of the paper).
+
+Greedy matching admits edges in descending-weight order subject to one-to-one
+constraints.  Its score lower-bounds the optimal matching (and is >= 1/2 of
+it).  KOIOS uses it (a) as the LB-filter oracle and (b) incrementally during
+refinement (iLB) — the incremental form lives in ``refinement.py``; this
+module is the dense oracle used for tests, the paper's LB-initialisation
+experiments, and as a reference for the incremental version.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=())
+def greedy_matching(w: jnp.ndarray):
+    """Greedy matching on weight matrix ``w`` (nq, nc), weights >= 0.
+
+    Returns (score, assign) where assign[i] is the column matched to row i
+    (-1 for unmatched).  Zero-weight edges are never admitted (matching is
+    optional, Def. 1).
+    """
+    nq, nc = w.shape
+    n_steps = min(nq, nc)
+
+    def body(_, state):
+        wm, score, assign = state
+        flat = jnp.argmax(wm)
+        i, j = flat // nc, flat % nc
+        val = wm[i, j]
+        take = val > 0.0
+        # mask out row i and column j
+        row_mask = jnp.arange(nq) == i
+        col_mask = jnp.arange(nc) == j
+        kill = row_mask[:, None] | col_mask[None, :]
+        wm = jnp.where(take & kill, _NEG, wm)
+        score = score + jnp.where(take, val, 0.0)
+        assign = jnp.where(take & row_mask, j, assign)
+        return wm, score, assign
+
+    init = (w, jnp.float32(0.0), jnp.full((nq,), -1, dtype=jnp.int32))
+    _, score, assign = jax.lax.fori_loop(0, n_steps, body, init)
+    return score, assign
+
+
+def greedy_matching_score(w: jnp.ndarray) -> jnp.ndarray:
+    return greedy_matching(w)[0]

@@ -1,0 +1,184 @@
+"""KOIOS post-processing phase (paper Alg. 2) — batched verification.
+
+Survivors of the refinement carry bounds [lb, ub].  We repeatedly:
+
+  1. theta_lb  = k-th largest lb (exact SO counts as lb);
+  2. UB-filter: drop sets with ub <= theta_lb (cannot affect the top-k);
+  3. No-EM (Lemma 7): sets with lb >= theta_ub (k-th largest ub) are in the
+     answer *without* computing a matching;
+  4. batch-verify the highest-ub remaining sets:  the whole batch runs
+     simultaneously (vmap'd auction — the paper's thread pool becomes batch
+     parallelism) with Lemma-8 dual-bound early termination at theta_lb;
+     ambiguous auction brackets are re-verified exactly (Hungarian), so the
+     search result is exact;
+  5. stop when no unverified live set has ub > theta_lb; the answer is the
+     top-k by lb.
+
+Verification recomputes the (|Q| x |C|) similarity block on the fly (MXU)
+instead of caching refinement similarities — see DESIGN.md §8 item 7.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .matching.auction import auction_batch, make_eps_schedule
+from .matching.hungarian import hungarian_batch
+from .types import SearchParams, SearchResult, SearchStats, SetCollection
+
+
+def _pad_pow2(n: int, lo: int = 8) -> int:
+    p = lo
+    while p < n:
+        p *= 2
+    return p
+
+
+class Verifier:
+    """Batched exact-SO verification with Lemma-8 early termination."""
+
+    def __init__(self, coll: SetCollection, query: np.ndarray, sim_provider,
+                 params: SearchParams):
+        self.coll = coll
+        self.query = np.asarray(query, dtype=np.int32)
+        self.sim = sim_provider
+        self.params = params
+        self.eps_schedule = make_eps_schedule(params.auction_eps)
+        self.stats_em_early = 0
+        self.stats_em_full = 0
+
+    def weight_matrix(self, set_id: int) -> np.ndarray:
+        toks = self.coll.get_set(int(set_id))
+        s = np.asarray(self.sim.pairwise(self.query, toks))
+        return np.where(s >= self.params.alpha, s, 0.0).astype(np.float32)
+
+    def _batch_weights(self, ids):
+        """Pad batch to verify_batch and columns to pow2 so the vmap'd
+        verifiers compile O(log max-set-size) distinct shapes."""
+        mats = [self.weight_matrix(i) for i in ids]
+        nq = len(self.query)
+        nq_pad = _pad_pow2(nq)          # logical nq passed separately
+        c_pad = _pad_pow2(max(m.shape[1] for m in mats))
+        B = max(self.params.verify_batch, len(ids))
+        w = np.zeros((B, nq_pad, c_pad), np.float32)
+        ncs = np.zeros(B, np.int32)
+        for b, m in enumerate(mats):
+            w[b, :nq, :m.shape[1]] = m
+            ncs[b] = m.shape[1]
+        return w, ncs
+
+    def verify(self, ids, theta_lb: float):
+        """Returns (lb, ub, early) arrays for the given set ids.
+
+        Brackets are exact (lb == ub == SO) unless early-terminated, in
+        which case ub < theta_lb certifies exclusion (Lemma 8).
+        """
+        ids = np.asarray(ids)
+        n = len(ids)
+        w, ncs = self._batch_weights(ids)
+        nqs = np.full(len(w), len(self.query), np.int32)
+        if self.params.verifier == "hungarian":
+            so, _ = hungarian_batch(jnp.asarray(w), jnp.asarray(nqs),
+                                    jnp.asarray(ncs))
+            so = np.asarray(so)[:n]
+            self.stats_em_full += n
+            return so.copy(), so.copy(), np.zeros(n, bool)
+
+        res = auction_batch(jnp.asarray(w), jnp.asarray(nqs),
+                            jnp.asarray(ncs), self.eps_schedule,
+                            jnp.float32(theta_lb))
+        lb = np.asarray(res.lb)[:n].copy()
+        ub = np.asarray(res.ub)[:n].copy()
+        early = np.asarray(res.early_stopped)[:n].copy()
+        self.stats_em_early += int(early.sum())
+        self.stats_em_full += int((~early).sum())
+
+        # exact fallback for brackets that straddle theta_lb (cannot decide)
+        ambiguous = (~early) & (lb < theta_lb) & (ub > theta_lb)
+        # also tighten any non-degenerate bracket so downstream ordering is
+        # exact when hybrid mode is requested
+        if self.params.verifier == "hybrid":
+            ambiguous |= (~early) & (ub - lb > 1e-6)
+        if ambiguous.any():
+            amb_ids = ids[ambiguous]
+            w2, ncs2 = self._batch_weights(amb_ids)
+            so, _ = hungarian_batch(
+                jnp.asarray(w2),
+                jnp.asarray(np.full(len(w2), len(self.query), np.int32)),
+                jnp.asarray(ncs2))
+            so = np.asarray(so)[:len(amb_ids)]
+            lb[ambiguous] = so
+            ub[ambiguous] = so
+            self.stats_em_full += len(amb_ids)
+        return lb, ub, early
+
+
+def run_postprocess(coll: SetCollection, query: np.ndarray, sim_provider,
+                    surv_ids: np.ndarray, surv_lb: np.ndarray,
+                    surv_ub: np.ndarray, theta_lb0: float,
+                    params: SearchParams,
+                    stats: SearchStats) -> SearchResult:
+    k = params.k
+    ids = np.asarray(surv_ids)
+    lb = np.asarray(surv_lb, np.float64).copy()
+    ub = np.asarray(surv_ub, np.float64).copy()
+    n = len(ids)
+    live = np.ones(n, bool)
+    verified = np.zeros(n, bool)
+    verifier = Verifier(coll, query, sim_provider, params)
+
+    def kth(x, mask, kk):
+        vals = x[mask]
+        if len(vals) < kk:
+            return 0.0
+        return float(np.partition(vals, -kk)[-kk])
+
+    theta_lb = max(theta_lb0, kth(lb, live, k))
+    guard = 0
+    while True:
+        guard += 1
+        assert guard < 10 * n + 100, "post-processing failed to converge"
+        theta_lb = max(theta_lb, kth(lb, live, k))
+        # UB filter (sets that can no longer reach the top-k; strict <
+        # keeps ties, which is always safe)
+        drop = live & (ub < theta_lb)
+        stats.pruned_postprocess += int((drop & ~verified).sum())
+        live &= ~drop
+        theta_ub = kth(ub, live, k)
+        no_em = live & ~verified & (lb >= theta_ub)     # Lemma 7
+        need = live & ~verified & (ub > theta_lb) & ~no_em
+        if not need.any():
+            stats.pruned_no_em += int(no_em.sum())
+            break
+        # verify the highest-ub pending sets as one batch
+        order = np.argsort(-ub[need.nonzero()[0]])
+        batch_idx = need.nonzero()[0][order[:params.verify_batch]]
+        blb, bub, bearly = verifier.verify(ids[batch_idx], theta_lb)
+        lb[batch_idx] = np.maximum(lb[batch_idx], blb)
+        ub[batch_idx] = np.minimum(ub[batch_idx], bub)
+        verified[batch_idx] = True
+        # early-terminated sets are certified below theta_lb
+        live[batch_idx[bearly]] = False
+
+    # ---- assemble final top-k by lb --------------------------------------
+    cand = live.nonzero()[0]
+    order = cand[np.argsort(-lb[cand], kind="stable")][:k]
+
+    if params.exact_scores and len(order):
+        pend = order[~verified[order]]
+        if len(pend):
+            blb, bub, _ = verifier.verify(ids[pend], -np.inf)
+            lb[pend] = blb
+            ub[pend] = bub
+            verified[pend] = True
+        order = cand[np.argsort(-lb[cand], kind="stable")][:k]
+
+    stats.pruned_em_early += verifier.stats_em_early
+    stats.exact_matches += verifier.stats_em_full
+    stats.theta_lb_final = float(theta_lb)
+    return SearchResult(
+        ids=ids[order].astype(np.int32),
+        lb=lb[order].astype(np.float32),
+        ub=ub[order].astype(np.float32),
+        stats=stats,
+    )

@@ -1,0 +1,165 @@
+"""KOIOS refinement phase (paper Alg. 1) — chunked & vectorized.
+
+The event stream (descending similarity, posting-level) is consumed in
+fixed-size chunks.  Within a chunk, events are admitted to each set's
+partial greedy matching sequentially (exactly the paper's admission order);
+after each chunk all bounds are refreshed and the UB filter runs as one
+masked vector pass (DESIGN.md §2).  Chunk granularity only *delays* pruning
+by at most one chunk — every bound is evaluated at a valid stream position,
+so the phase is exact for both ub modes' soundness guarantees.
+
+State arrays (per set):
+  S, l      — partial greedy matching score / cardinality (iLB, Lemma 5)
+  T, d      — sum / count of first-seen sims per distinct query element
+              (sound iUB', DESIGN.md §7.5)
+  seen      — appeared in the stream (candidate set)
+  alive     — not pruned
+  qmatched  — (num_sets, ceil(|Q|/32)) uint32 greedy q-side occupancy
+  qseen     — same layout; "query element streamed with this set"
+  slot_matched — (total_tokens,) greedy t-side occupancy (flat CSR slots)
+
+After the stream is exhausted every unstreamed pair has sim < alpha and
+contributes 0 to SO, so the final bounds drop their s_now terms:
+sound mode:  UB_final = T;   paper mode: UB_final = S + m*alpha.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .filters import compute_iub, kth_largest, prune_mask
+from .inverted_index import InvertedIndex
+from .token_stream import EventStream, pad_events
+from .types import SearchStats
+
+
+@dataclasses.dataclass
+class RefinementResult:
+    S: np.ndarray          # (num_sets,) greedy partial score (LB)
+    ub: np.ndarray         # (num_sets,) final per-set upper bound
+    seen: np.ndarray       # (num_sets,) bool
+    alive: np.ndarray      # (num_sets,) bool
+    theta_lb: float
+    stats: SearchStats
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "num_sets", "q_words", "total_slots", "ub_mode"))
+def _run_refinement(ev_set, ev_q, ev_slot, ev_sim, cap, k: int,
+                    num_sets: int, q_words: int, total_slots: int,
+                    ub_mode: str, alpha):
+    """Scan all chunks.  ev_* are (n_chunks, chunk)."""
+
+    def chunk_step(state, chunk):
+        S, l, T, d, seen, alive, qmatched, qseen, slot_matched, theta_lb = state
+        c_set, c_q, c_slot, c_sim = chunk
+        chunk_len = c_set.shape[0]
+
+        def ev_body(e, st):
+            (S, l, T, d, seen, qmatched, qseen, slot_matched) = st
+            C = c_set[e]
+            q = c_q[e]
+            slot = c_slot[e]
+            s = c_sim[e]
+            valid = C >= 0
+            Ci = jnp.maximum(C, 0)
+            do = valid & alive[Ci]
+            qw = q >> 5
+            qb = (q & 31).astype(jnp.uint32)
+            bit = jnp.uint32(1) << qb
+
+            # --- first-seen bookkeeping (sound iUB') ------------------------
+            qs_word = qseen[Ci, qw]
+            first = do & ((qs_word & bit) == 0)
+            T = T.at[Ci].add(jnp.where(first, s, 0.0))
+            d = d.at[Ci].add(first.astype(jnp.int32))
+            qseen = qseen.at[Ci, qw].set(
+                jnp.where(first, qs_word | bit, qs_word))
+            seen = seen.at[Ci].set(seen[Ci] | do)
+
+            # --- greedy admission (iLB, Lemma 5) ----------------------------
+            qm_word = qmatched[Ci, qw]
+            q_free = (qm_word & bit) == 0
+            t_free = ~slot_matched[slot]
+            adm = do & q_free & t_free
+            S = S.at[Ci].add(jnp.where(adm, s, 0.0))
+            l = l.at[Ci].add(adm.astype(jnp.int32))
+            qmatched = qmatched.at[Ci, qw].set(
+                jnp.where(adm, qm_word | bit, qm_word))
+            slot_matched = slot_matched.at[slot].set(
+                slot_matched[slot] | adm)
+            return (S, l, T, d, seen, qmatched, qseen, slot_matched)
+
+        (S, l, T, d, seen, qmatched, qseen, slot_matched) = jax.lax.fori_loop(
+            0, chunk_len, ev_body,
+            (S, l, T, d, seen, qmatched, qseen, slot_matched))
+
+        # --- vectorized filter pass (per chunk) -----------------------------
+        s_now = c_sim[-1]
+        theta_lb = jnp.maximum(theta_lb, kth_largest(S, k))
+        iub = compute_iub(S, l, T, d, cap, s_now, seen, ub_mode)
+        killed = prune_mask(iub, theta_lb, seen, alive)
+        alive = alive & ~killed
+        n_killed = jnp.sum(killed)
+        return (S, l, T, d, seen, alive, qmatched, qseen, slot_matched,
+                theta_lb), n_killed
+
+    state0 = (
+        jnp.zeros((num_sets,), jnp.float32),          # S
+        jnp.zeros((num_sets,), jnp.int32),            # l
+        jnp.zeros((num_sets,), jnp.float32),          # T
+        jnp.zeros((num_sets,), jnp.int32),            # d
+        jnp.zeros((num_sets,), bool),                 # seen
+        jnp.ones((num_sets,), bool),                  # alive
+        jnp.zeros((num_sets, q_words), jnp.uint32),   # qmatched
+        jnp.zeros((num_sets, q_words), jnp.uint32),   # qseen
+        jnp.zeros((total_slots,), bool),              # slot_matched
+        jnp.float32(0.0),                             # theta_lb
+    )
+    state, killed_per_chunk = jax.lax.scan(
+        chunk_step, state0, (ev_set, ev_q, ev_slot, ev_sim))
+    S, l, T, d, seen, alive, _, _, _, theta_lb = state
+
+    # --- stream exhausted: drop the s_now term (see module docstring) -------
+    s_final = alpha if ub_mode == "paper" else jnp.float32(0.0)
+    ub_final = compute_iub(S, l, T, d, cap, s_final, seen, ub_mode)
+    theta_lb = jnp.maximum(theta_lb, kth_largest(S, k))
+    killed = prune_mask(ub_final, theta_lb, seen, alive)
+    alive = alive & ~killed
+    return (S, ub_final, seen, alive, theta_lb,
+            jnp.sum(killed_per_chunk) + jnp.sum(killed))
+
+
+def run_refinement(events: EventStream, set_sizes: np.ndarray, nq: int,
+                   total_slots: int, k: int, alpha: float,
+                   chunk_size: int = 256,
+                   ub_mode: str = "sound") -> RefinementResult:
+    num_sets = len(set_sizes)
+    ev_set, ev_q, ev_slot, ev_sim = pad_events(events, chunk_size)
+    cap = jnp.minimum(jnp.asarray(set_sizes, jnp.int32), jnp.int32(nq))
+    # pow2 bitmask width: bounds jit variants to O(log |Q|) shapes
+    q_words = max(1, -(-nq // 32))
+    p = 1
+    while p < q_words:
+        p *= 2
+    q_words = p
+    S, ub, seen, alive, theta_lb, n_pruned = _run_refinement(
+        jnp.asarray(ev_set), jnp.asarray(ev_q), jnp.asarray(ev_slot),
+        jnp.asarray(ev_sim), cap, k, num_sets, q_words, total_slots,
+        ub_mode, jnp.float32(alpha))
+    stats = SearchStats(
+        candidates=int(jnp.sum(seen)),
+        pruned_refinement=int(n_pruned),
+        stream_tuples=events.n_tuples,
+        stream_events=len(events),
+        refinement_chunks=ev_set.shape[0],
+        theta_lb_final=float(theta_lb),
+    )
+    return RefinementResult(
+        S=np.asarray(S), ub=np.asarray(ub), seen=np.asarray(seen),
+        alive=np.asarray(alive), theta_lb=float(theta_lb), stats=stats)

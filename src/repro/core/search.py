@@ -1,0 +1,117 @@
+"""KoiosSearch — end-to-end top-k semantic overlap search (paper Fig. 2).
+
+Single-partition pipeline:
+    token stream (blocked sim matmul)  ->  event expansion (inverted index)
+    ->  refinement (chunked vectorized filters)  ->  post-processing
+    (No-EM + batched verification w/ Lemma-8 early termination).
+
+Partitioned scale-out (paper §VI last paragraph): the repository is split
+into contiguous shards; every shard runs refinement + post-processing with
+a *shared* theta_lb (the max over shards — on a device mesh this is an
+all-reduce-max, see ``repro.launch.serve`` / ``repro.runtime.sharding``),
+and the per-shard top-k lists are merged.  This module provides the
+host-level reference implementation (exactly the paper's semantics); the
+mesh-parallel execution path reuses the same per-shard functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .inverted_index import InvertedIndex
+from .postprocess import run_postprocess
+from .refinement import run_refinement
+from .token_stream import build_token_stream, expand_to_events
+from .types import SearchParams, SearchResult, SearchStats, SetCollection
+
+
+@dataclasses.dataclass
+class KoiosIndex:
+    """Prebuilt indexes for one partition of the repository."""
+
+    coll: SetCollection
+    inv: InvertedIndex
+    id_offset: int = 0      # global id of the partition's first set
+
+    @staticmethod
+    def build(coll: SetCollection, id_offset: int = 0) -> "KoiosIndex":
+        return KoiosIndex(coll=coll, inv=InvertedIndex.build(coll),
+                          id_offset=id_offset)
+
+
+def search_partition(index: KoiosIndex, query: np.ndarray, sim_provider,
+                     params: SearchParams,
+                     theta_lb0: float = 0.0) -> SearchResult:
+    """Run KOIOS on one partition; ``theta_lb0`` is the shared global bound."""
+    coll = index.coll
+    query = np.asarray(query, dtype=np.int32)
+    stream = build_token_stream(query, sim_provider, params.alpha)
+    events = expand_to_events(stream, index.inv)
+
+    if len(events) == 0:
+        return SearchResult(
+            ids=np.zeros(0, np.int32), lb=np.zeros(0, np.float32),
+            ub=np.zeros(0, np.float32), stats=SearchStats())
+
+    ref = run_refinement(
+        events, coll.set_sizes, len(query), coll.total_tokens,
+        params.k, params.alpha, params.chunk_size, params.ub_mode)
+    ref.theta_lb = max(ref.theta_lb, theta_lb0)
+
+    surv = (ref.seen & ref.alive).nonzero()[0]
+    result = run_postprocess(
+        coll, query, sim_provider, surv, ref.S[surv], ref.ub[surv],
+        ref.theta_lb, params, ref.stats)
+    return SearchResult(
+        ids=(result.ids + index.id_offset).astype(np.int32),
+        lb=result.lb, ub=result.ub, stats=result.stats)
+
+
+def merge_topk(results: Sequence[SearchResult], k: int) -> SearchResult:
+    """Merge per-partition top-k lists (paper: 'merge-sorted')."""
+    ids = np.concatenate([r.ids for r in results])
+    lb = np.concatenate([r.lb for r in results])
+    ub = np.concatenate([r.ub for r in results])
+    order = np.argsort(-lb, kind="stable")[:k]
+    stats = SearchStats()
+    for r in results:
+        for f, v in r.stats.as_dict().items():
+            setattr(stats, f, getattr(stats, f) + v if f != "theta_lb_final"
+                    else max(getattr(stats, f), v))
+    return SearchResult(ids=ids[order], lb=lb[order], ub=ub[order],
+                        stats=stats)
+
+
+class KoiosSearch:
+    """Public search API over a (possibly partitioned) repository."""
+
+    def __init__(self, coll: SetCollection, sim_provider,
+                 params: Optional[SearchParams] = None,
+                 partitions: int = 1):
+        self.params = params or SearchParams()
+        self.sim = sim_provider
+        self.partitions = []
+        n = coll.num_sets
+        bounds = np.linspace(0, n, partitions + 1).astype(int)
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            if hi > lo:
+                self.partitions.append(
+                    KoiosIndex.build(coll.slice_sets(int(lo), int(hi)),
+                                     id_offset=int(lo)))
+
+    def search(self, query: np.ndarray, k: Optional[int] = None) -> SearchResult:
+        params = self.params if k is None else dataclasses.replace(
+            self.params, k=k)
+        theta_lb = 0.0
+        results = []
+        # Sequential host loop over partitions sharing theta_lb (the mesh
+        # execution path runs these concurrently with an all-reduce-max;
+        # sharing the running max here mirrors the paper's shared bound).
+        for part in self.partitions:
+            r = search_partition(part, query, self.sim, params, theta_lb)
+            results.append(r)
+            if len(r.lb) >= params.k:
+                theta_lb = max(theta_lb, float(r.lb[params.k - 1]))
+        return merge_topk(results, params.k)

@@ -1,0 +1,147 @@
+"""The token stream I_e — chunked, blocked-matmul replacement for Faiss+PQ.
+
+Paper §IV: I_e yields (q, t, sim(q, t)) tuples for every vocabulary token t
+with sim >= alpha to some query element, in globally descending similarity
+order, realised with a Faiss index plus a |Q|-slot priority queue.
+
+TPU adaptation (DESIGN.md §2): the index probe is a blocked similarity
+matmul (MXU) over vocabulary tiles — `repro.kernels.cosine_topk` is the
+fused Pallas kernel for the serving path; here the same block computation
+runs through the jnp provider and the >=alpha entries are compacted host
+side (compaction is inherently dynamic-shape, i.e. host work in either
+implementation — the paper also walks its priority queue on the host).
+
+The refinement phase consumes the stream *expanded to posting-level events*
+through the inverted index (paper: "probing I_s"), still in descending
+order:  (set, q, slot, sim) per posting of each streamed token.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .inverted_index import InvertedIndex
+from .types import SetCollection
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStream:
+    """All pairs (q position, token, sim >= alpha), descending by sim."""
+
+    q_pos: np.ndarray    # (T,) int32 — position of the query element in Q
+    token: np.ndarray    # (T,) int32 — vocabulary token id
+    sim: np.ndarray      # (T,) float32, non-increasing
+
+    def __len__(self) -> int:
+        return len(self.sim)
+
+
+@dataclasses.dataclass(frozen=True)
+class EventStream:
+    """Posting-level expansion of a TokenStream (still descending by sim)."""
+
+    set_id: np.ndarray   # (E,) int32
+    q_pos: np.ndarray    # (E,) int32
+    slot: np.ndarray     # (E,) int64 — flat token-array slot (t-side identity)
+    sim: np.ndarray      # (E,) float32, non-increasing
+    n_tuples: int        # stream tuples that produced these events
+
+    def __len__(self) -> int:
+        return len(self.sim)
+
+
+def build_token_stream(query: np.ndarray, sim_provider, alpha: float,
+                       block_size: int = 4096) -> TokenStream:
+    """Collect all (q, t, sim>=alpha) pairs via blocked similarity compute.
+
+    ``sim_provider`` must expose ``query_vs_vocab_block(q_ids, lo, hi)`` and
+    ``vocab_size``.  Identity pairs (q, q) are always included with sim 1.0
+    (paper §V: a query element is returned for itself on first probe — this
+    initialises bounds with the vanilla overlap and covers out-of-vocabulary
+    elements).
+    """
+    query = np.asarray(query, dtype=np.int32)
+    nq = len(query)
+    vocab = sim_provider.vocab_size
+    qs, ts, ss = [], [], []
+    for lo in range(0, vocab, block_size):
+        hi = min(lo + block_size, vocab)
+        block = np.asarray(sim_provider.query_vs_vocab_block(query, lo, hi))
+        qi, tj = np.nonzero(block >= alpha)
+        if len(qi):
+            qs.append(qi.astype(np.int32))
+            ts.append((tj + lo).astype(np.int32))
+            ss.append(block[qi, tj].astype(np.float32))
+    if qs:
+        q_pos = np.concatenate(qs)
+        token = np.concatenate(ts)
+        sim = np.concatenate(ss)
+    else:
+        q_pos = np.zeros(0, np.int32)
+        token = np.zeros(0, np.int32)
+        sim = np.zeros(0, np.float32)
+
+    # Identity pairs (q, q, 1.0) — add any that the provider missed (e.g.
+    # degenerate embeddings) and dedupe.
+    in_vocab = query < vocab
+    id_q = np.arange(nq, dtype=np.int32)[in_vocab]
+    id_t = query[in_vocab]
+    key = q_pos.astype(np.int64) * vocab + token
+    id_key = id_q.astype(np.int64) * vocab + id_t
+    missing = ~np.isin(id_key, key)
+    q_pos = np.concatenate([q_pos, id_q[missing]])
+    token = np.concatenate([token, id_t[missing]])
+    sim = np.concatenate([sim, np.ones(missing.sum(), np.float32)])
+
+    # identity pairs must carry sim exactly 1.0 even if the provider returned
+    # a slightly different value
+    ident = query[q_pos] == token
+    sim = np.where(ident, np.float32(1.0), sim)
+
+    order = np.argsort(-sim, kind="stable")
+    return TokenStream(q_pos=q_pos[order], token=token[order], sim=sim[order])
+
+
+def expand_to_events(stream: TokenStream, index: InvertedIndex) -> EventStream:
+    """Expand stream tuples through the inverted index to per-set events."""
+    counts = index.posting_counts()
+    reps = counts[stream.token]
+    set_id = np.empty(int(reps.sum()), dtype=np.int32)
+    slot = np.empty(len(set_id), dtype=np.int64)
+    q_pos = np.repeat(stream.q_pos, reps)
+    sim = np.repeat(stream.sim, reps)
+    out = 0
+    for t, n in zip(stream.token, reps):
+        if n:
+            lo = index.tok_indptr[t]
+            set_id[out:out + n] = index.posting_set[lo:lo + n]
+            slot[out:out + n] = index.posting_slot[lo:lo + n]
+            out += n
+    return EventStream(set_id=set_id, q_pos=q_pos, slot=slot, sim=sim,
+                       n_tuples=len(stream))
+
+
+def pad_events(events: EventStream, chunk: int):
+    """Pad event arrays to a power-of-two number of ``chunk``-sized chunks
+    (set_id = -1 padding).  Pow2 chunk counts bound jit recompilations of the
+    refinement scan to O(log stream-length) distinct shapes."""
+    e = len(events)
+    n_chunks = max(1, -(-e // chunk))
+    p = 1
+    while p < n_chunks:
+        p *= 2
+    n_chunks = p
+    total = n_chunks * chunk
+    pad = total - e
+
+    def _pad(x, fill):
+        return np.concatenate([x, np.full(pad, fill, dtype=x.dtype)])
+
+    last_sim = events.sim[-1] if e else np.float32(1.0)
+    return (
+        _pad(events.set_id, -1).reshape(n_chunks, chunk),
+        _pad(events.q_pos, 0).reshape(n_chunks, chunk),
+        _pad(events.slot, 0).reshape(n_chunks, chunk),
+        _pad(events.sim, last_sim).reshape(n_chunks, chunk),
+    )

@@ -1,0 +1,132 @@
+"""Core datatypes for KOIOS semantic overlap search.
+
+A :class:`SetCollection` is the repository L of the paper: a collection of
+sets of tokens drawn from a shared vocabulary D.  Sets are stored in CSR
+layout (``set_indptr`` / ``set_tokens``) so the whole repository is three
+flat arrays — the layout every phase of the search consumes directly and
+the layout that shards cleanly across a device mesh (contiguous range of
+sets per shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SetCollection:
+    """Repository of sets in CSR layout.
+
+    set i occupies ``set_tokens[set_indptr[i]:set_indptr[i+1]]``; tokens are
+    vocabulary ids in ``[0, vocab_size)``.  Tokens within a set are distinct
+    (sets, not bags) — enforced by the constructors in ``repro.data.sets``.
+    """
+
+    set_indptr: np.ndarray   # (num_sets + 1,) int64
+    set_tokens: np.ndarray   # (total_tokens,)  int32
+    vocab_size: int
+
+    @property
+    def num_sets(self) -> int:
+        return len(self.set_indptr) - 1
+
+    @property
+    def total_tokens(self) -> int:
+        return int(self.set_indptr[-1])
+
+    @property
+    def set_sizes(self) -> np.ndarray:
+        return np.diff(self.set_indptr).astype(np.int32)
+
+    def get_set(self, i: int) -> np.ndarray:
+        return self.set_tokens[self.set_indptr[i]:self.set_indptr[i + 1]]
+
+    def validate(self) -> None:
+        assert self.set_indptr.ndim == 1 and self.set_tokens.ndim == 1
+        assert self.set_indptr[0] == 0
+        assert int(self.set_indptr[-1]) == len(self.set_tokens)
+        assert np.all(np.diff(self.set_indptr) >= 0)
+        if len(self.set_tokens):
+            assert self.set_tokens.min() >= 0
+            assert self.set_tokens.max() < self.vocab_size
+
+    def slice_sets(self, lo: int, hi: int) -> "SetCollection":
+        """Contiguous sub-collection [lo, hi) — used for partitioning."""
+        base = self.set_indptr[lo]
+        return SetCollection(
+            set_indptr=(self.set_indptr[lo:hi + 1] - base).copy(),
+            set_tokens=self.set_tokens[base:self.set_indptr[hi]].copy(),
+            vocab_size=self.vocab_size,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Knobs of the KOIOS search (paper §VIII defaults: alpha=.8, k=10)."""
+
+    k: int = 10
+    alpha: float = 0.8
+    # --- TPU adaptation knobs (DESIGN.md §2) ---
+    chunk_size: int = 256          # stream tuples consumed per filter update
+    verify_batch: int = 32         # candidate sets verified simultaneously
+    # 'hungarian' = exact JV (paper-faithful; fastest on CPU hosts);
+    # 'auction'/'hybrid' = batched auction with Lemma-8 dual early
+    # termination — the TPU serving path (33x slower on a single CPU core:
+    # EXPERIMENTS.md §Perf KOIOS-engine notes)
+    verifier: str = "hungarian"
+    auction_eps: float = 1e-4      # final epsilon of eps-scaling
+    # 'sound' = corrected per-query-element iUB (DESIGN.md §7.5);
+    # 'paper'  = the paper's Lemma-6 bound (unsound; reproduction mode only)
+    ub_mode: str = "sound"
+    # beyond-paper: stop the stream once no unseen set can enter the top-k
+    early_stream_stop: bool = False
+    # report exact SO for the returned top-k (extra verifications)
+    exact_scores: bool = True
+
+    def __post_init__(self):
+        assert self.k >= 1
+        assert 0.0 < self.alpha <= 1.0
+        assert self.verifier in ("auction", "hungarian", "hybrid")
+        assert self.ub_mode in ("sound", "paper")
+
+
+@dataclasses.dataclass
+class SearchStats:
+    """Instrumentation mirroring the paper's Tables II/IV/V."""
+
+    candidates: int = 0            # sets that appeared in the stream
+    pruned_refinement: int = 0     # iUB/UB-filtered during refinement
+    pruned_postprocess: int = 0    # UB-filtered during post-processing
+    pruned_no_em: int = 0          # accepted by No-EM (no matching computed)
+    pruned_em_early: int = 0       # matchings aborted by the dual bound
+    exact_matches: int = 0         # full exact matchings computed
+    stream_tuples: int = 0         # (q, t, sim) tuples consumed
+    stream_events: int = 0         # posting-level events consumed
+    refinement_chunks: int = 0
+    theta_lb_final: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    """Top-k result: set ids, score bounds, and per-phase statistics.
+
+    ``lb``/``ub`` bracket the true semantic overlap of each returned set;
+    when ``SearchParams.exact_scores`` is set, lb == ub == SO.
+    """
+
+    ids: np.ndarray               # (k,) int32, descending score order
+    lb: np.ndarray                # (k,) float32
+    ub: np.ndarray                # (k,) float32
+    stats: SearchStats
+
+    @property
+    def scores(self) -> np.ndarray:
+        return self.lb
+
+    def kth_score(self) -> float:
+        return float(self.lb[-1]) if len(self.lb) else 0.0

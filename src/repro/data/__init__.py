@@ -1,0 +1,8 @@
+from .sets import (make_collection, make_embeddings, dataset_preset,
+                   sample_queries, PRESETS)
+from .embeddings import EmbeddingTableProvider
+
+__all__ = [
+    "make_collection", "make_embeddings", "dataset_preset", "sample_queries",
+    "PRESETS", "EmbeddingTableProvider",
+]

@@ -1,0 +1,48 @@
+"""Embedding providers for the KOIOS similarity function.
+
+* :class:`EmbeddingTableProvider` — frozen table (the paper's FastText
+  role), built from ``make_embeddings`` or loaded from a checkpoint.
+* ``tower_embeddings`` — pull the token-embedding matrix out of any trained
+  model tower of the framework (``repro.models``): the embedding table of a
+  trained LM *is* a semantic similarity provider, which is how the KOIOS
+  serving path composes with the assigned architectures.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.similarity import EmbeddingSimilarity
+
+
+class EmbeddingTableProvider(EmbeddingSimilarity):
+    """Frozen (vocab, dim) table provider with coverage accounting.
+
+    ``coverage`` mimics the paper's pre-trained-vector coverage filter
+    (sets with <70% coverage are discarded upstream); uncovered tokens get
+    a random unique direction — they only ever match identically (the
+    out-of-vocabulary rule of paper §V).
+    """
+
+    def __init__(self, table: np.ndarray, coverage: float = 1.0,
+                 seed: int = 0):
+        table = np.asarray(table, np.float32)
+        if coverage < 1.0:
+            rng = np.random.default_rng(seed + 3)
+            n = len(table)
+            uncovered = rng.random(n) > coverage
+            rand = rng.normal(size=(int(uncovered.sum()), table.shape[1]))
+            rand /= np.linalg.norm(rand, axis=1, keepdims=True)
+            table = table.copy()
+            table[uncovered] = rand.astype(np.float32)
+        super().__init__(table)
+
+
+def tower_embeddings(params: dict) -> np.ndarray:
+    """Extract a model tower's token-embedding table as a similarity table.
+
+    Works with any ``repro.models`` parameter pytree (the embedding lives at
+    ``params['embed']['table']``).
+    """
+    table = np.asarray(params["embed"]["table"], np.float32)
+    norms = np.linalg.norm(table, axis=1, keepdims=True)
+    return table / np.maximum(norms, 1e-6)

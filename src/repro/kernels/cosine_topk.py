@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: blocked cosine similarity + running top-k.
+
+This is the token-stream generator (paper §IV): it replaces the Faiss index
+probe with an MXU matmul over vocabulary tiles and an on-chip running top-k
+merge, so the (|Q| x |V|) score matrix never round-trips to HBM.
+
+Grid: one step per vocabulary tile of ``bv`` rows.  The query block and the
+running top-k output blocks have constant index maps, so they stay resident
+in VMEM across the sequential grid sweep (revisiting semantics); each step
+computes a (nq, bv) score tile and folds it into the running (nq, k) top-k
+with k max+mask selection passes.
+
+VMEM working set per step:  nq*d (queries) + bv*d (tile) + nq*bv (scores)
++ 2*nq*k (running top-k).  With nq=256, d=256, bv=512, k=32 (f32):
+256KB + 512KB + 512KB + 64KB ~= 1.3 MB — comfortably inside the ~16 MB VMEM
+budget, and the matmul contraction dim d and tile dim bv are multiples of
+the 128-lane MXU tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -1e30  # python scalar: jnp constants may not be closure-captured by kernels
+
+
+def _kernel(qe_ref, ev_ref, vals_ref, idx_ref, *, k: int, bv: int,
+            nv_real: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, _NEG)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    qe = qe_ref[...]                       # (nq, d)
+    ev = ev_ref[...]                       # (bv, d)
+    scores = jax.lax.dot_general(
+        qe, ev, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (nq, bv)
+    base = step * bv
+    cand_idx = base + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(cand_idx < nv_real, scores, _NEG)
+
+    comb_v = jnp.concatenate([vals_ref[...], scores], axis=1)
+    comb_i = jnp.concatenate([idx_ref[...], cand_idx], axis=1)
+    nq = comb_v.shape[0]
+    out_v = jnp.zeros((nq, k), jnp.float32)
+    out_i = jnp.zeros((nq, k), jnp.int32)
+
+    def select(j, st):
+        cv, ci, ov, oi = st
+        m = jnp.max(cv, axis=1)
+        a = jnp.argmax(cv, axis=1)
+        picked = jnp.take_along_axis(ci, a[:, None], axis=1)
+        ov = jax.lax.dynamic_update_slice(ov, m[:, None], (0, j))
+        oi = jax.lax.dynamic_update_slice(oi, picked, (0, j))
+        cv = cv.at[jnp.arange(nq), a].set(_NEG)
+        return cv, ci, ov, oi
+
+    _, _, out_v, out_i = jax.lax.fori_loop(
+        0, k, select, (comb_v, comb_i, out_v, out_i))
+    vals_ref[...] = out_v
+    idx_ref[...] = out_i
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "bv", "interpret"))
+def cosine_topk(qe: jnp.ndarray, ev: jnp.ndarray, k: int, bv: int = 512,
+                interpret: bool = False):
+    """Top-k cosine scores of each query row against all vocab rows.
+
+    qe: (nq, d) and ev: (nv, d), both L2-normalized.  Returns
+    (vals (nq, k), idx (nq, k)), descending per row.
+    """
+    nq, d = qe.shape
+    nv, _ = ev.shape
+    # pad vocab to a multiple of bv
+    nv_pad = -(-nv // bv) * bv
+    if nv_pad != nv:
+        ev = jnp.pad(ev, ((0, nv_pad - nv), (0, 0)))
+    grid = (nv_pad // bv,)
+    kernel = functools.partial(_kernel, k=k, bv=bv, nv_real=nv)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nq, d), lambda i: (0, 0)),
+            pl.BlockSpec((bv, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nq, k), lambda i: (0, 0)),
+            pl.BlockSpec((nq, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qe.astype(jnp.float32), ev.astype(jnp.float32))
+    return vals, idx

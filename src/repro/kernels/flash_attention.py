@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: causal flash attention (forward / serving path).
+
+§Perf residual of EXPERIMENTS.md cell 1: the unfused softmax(QK^T)V chain
+materializes the (S, S) score matrix in HBM between the two matmuls — the
+dominant memory term of every dense prefill/train cell.  Flash attention
+tiles the computation so scores live only in VMEM: for each query tile the
+kernel sweeps KV tiles with a running (max, sum, accumulator) online
+softmax; HBM traffic drops from O(S^2) to O(S·d).
+
+Grid: (batch*heads, q_tiles, kv_tiles) with the kv sweep innermost; the
+running state lives in VMEM scratch across the sweep (same revisiting
+pattern as ssd_scan.py).  Causality: kv tiles entirely above the diagonal
+are masked to -inf (they still occupy grid steps — simple and correct;
+the production upgrade is a skip via grid pruning).
+
+Serving path only (fwd); training uses the XLA path where remat policy
+controls the backward recompute (EXPERIMENTS.md §Perf cell 1 iteration 4).
+
+VMEM per step: 2*bq*d (q, acc) + 2*bk*d (k, v) + bq*bk (scores) + 2*bq
+— bq=bk=256, d=128, f32: ~0.6 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30  # python scalar: jnp constants may not be closure-captured
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bk: int, scale: float, causal: bool, s_real: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (bq, d)
+    k = k_ref[0]                                   # (bk, d)
+    v = v_ref[0]                                   # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = cols < s_real          # padded KV columns must not contribute
+    if causal:
+        valid &= rows >= cols
+    s = jnp.where(valid, s, _NEG)
+
+    m_prev = m_ref[...]                            # (bq, 1)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                         # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bk", "causal", "interpret"))
+def flash_attention(q, k, v, *, bq: int = 256, bk: int = 256,
+                    causal: bool = True, interpret: bool = False):
+    """q, k, v: (B, H, S, d) (same S; GQA expansion upstream).
+    Returns (B, H, S, d).  S must divide by the tile sizes (wrapper pads)."""
+    B, H, S, d = q.shape
+    scale = d ** -0.5
+    pad_q = (-S) % bq
+    pad_k = (-S) % bk
+    if pad_q or pad_k:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sq, Sk = S + pad_q, S + pad_k
+    qf = q.reshape(B * H, Sq, d)
+    kf = k.reshape(B * H, Sk, d)
+    vf = v.reshape(B * H, Sk, d)
+    grid = (B * H, Sq // bq, Sk // bk)
+    kernel = functools.partial(_kernel, bq=bq, bk=bk, scale=scale,
+                               causal=causal, s_real=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denom
+            pltpu.VMEM((bq, d), jnp.float32),    # accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, d)[:, :, :S]

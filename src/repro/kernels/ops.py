@@ -1,0 +1,66 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On non-TPU backends (this container is CPU-only) every kernel runs in
+``interpret=True`` mode — the kernel body executes as traced jnp on CPU, so
+correctness (tests/test_kernels.py) is validated against the ``ref.py``
+oracles on exactly the code that lowers to Mosaic on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .auction_round import auction_topk2 as _auction_topk2
+from .cosine_topk import cosine_topk as _cosine_topk
+from .flash_attention import flash_attention as _flash_attention
+from .ssd_scan import ssd_chunked as _ssd_chunked
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def cosine_topk(qe, ev, k: int, bv: int = 512):
+    """Blocked cosine top-k (token-stream generator).  See cosine_topk.py."""
+    return _cosine_topk(jnp.asarray(qe), jnp.asarray(ev), k=k, bv=bv,
+                        interpret=_interpret())
+
+
+def auction_topk2(wm, prices, bn: int = 256):
+    """Fused profit top-2 for one auction round.  See auction_round.py."""
+    return _auction_topk2(jnp.asarray(wm), jnp.asarray(prices), bn=bn,
+                          interpret=_interpret())
+
+
+def ssd(x, dt, A, B, C, D, chunk: int = 64):
+    """Mamba2 SSD chunked scan; pads L to a multiple of ``chunk``."""
+    x = jnp.asarray(x)
+    L = x.shape[1]
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(jnp.asarray(dt), ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(jnp.asarray(B), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(jnp.asarray(C), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y = _ssd_chunked(x, jnp.asarray(dt), jnp.asarray(A), jnp.asarray(B),
+                     jnp.asarray(C), jnp.asarray(D), chunk=chunk,
+                     interpret=_interpret())
+    return y[:, :L]
+
+
+def flash_attention(q, k, v, bq: int = 256, bk: int = 256,
+                    causal: bool = True):
+    """Causal flash attention (serving path).  See flash_attention.py."""
+    return _flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            bq=bq, bk=bk, causal=causal,
+                            interpret=_interpret())
+
+
+# re-exported oracles (benchmarks compare against these)
+cosine_topk_ref = ref.cosine_topk_ref
+auction_topk2_ref = ref.auction_topk2_ref
+ssd_ref = ref.ssd_ref
+flash_attention_ref = ref.flash_attention_ref

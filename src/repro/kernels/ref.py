@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_topk_ref(qe: jnp.ndarray, ev: jnp.ndarray, k: int):
+    """Full-matrix cosine scores + top-k per query row.
+
+    qe: (nq, d) L2-normalized query embeddings.
+    ev: (nv, d) L2-normalized vocabulary embeddings.
+    Returns (vals (nq, k), idx (nq, k)) descending.
+    """
+    scores = qe @ ev.T
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx.astype(jnp.int32)
+
+
+def auction_topk2_ref(wm: jnp.ndarray, prices: jnp.ndarray):
+    """Per-row best/second-best profit and best column (one auction round's
+    heavy pass).  wm: (n, m); prices: (m,).  Returns (w1, w2, jstar)."""
+    profits = wm - prices[None, :]
+    w1 = jnp.max(profits, axis=1)
+    jstar = jnp.argmax(profits, axis=1).astype(jnp.int32)
+    cols = jnp.arange(wm.shape[1])
+    second = jnp.where(cols[None, :] == jstar[:, None], -jnp.inf, profits)
+    w2 = jnp.max(second, axis=1)
+    return w1, w2, jstar
+
+
+def ssd_ref(x, dt, A, B, C, D, chunk: int = 0):
+    """Mamba2 SSD (state-space duality) sequential-scan oracle.
+
+    Shapes (single sequence):
+      x:  (L, H, P)    input heads (P = head dim)
+      dt: (L, H)       softplus-ed timestep per head
+      A:  (H,)         negative state decay per head (A < 0)
+      B:  (L, G, S)    input->state projection (G state groups, S = state dim)
+      C:  (L, G, S)    state->output projection
+      D:  (H,)         skip connection
+    Heads are grouped: head h uses group h % G.
+    Returns y: (L, H, P).
+
+    Recurrence (per head h, group g = h % G):
+      S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * B_t (outer) x_t
+      y_t = C_t . S_t + D_h * x_t
+    """
+    L, H, P = x.shape
+    G = B.shape[1]
+    S = B.shape[2]
+
+    def step(carry, t):
+        st = carry                                 # (H, P, S)
+        dta = jnp.exp(dt[t][:, None, None] * A[:, None, None])  # (H,1,1)
+        Bg = B[t][jnp.arange(H) % G]               # (H, S)
+        Cg = C[t][jnp.arange(H) % G]               # (H, S)
+        upd = dt[t][:, None, None] * x[t][:, :, None] * Bg[:, None, :]
+        st = dta * st + upd                        # (H, P, S)
+        y = jnp.einsum("hps,hs->hp", st, Cg) + D[:, None] * x[t]
+        return st, y
+
+    st0 = jnp.zeros((H, P, S), x.dtype)
+    _, ys = jax.lax.scan(step, st0, jnp.arange(L))
+    return ys
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """Dense softmax(QK^T/sqrt(d))V oracle.  q,k,v: (B,H,S,d)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * d ** -0.5
+    if causal:
+        S = q.shape[2]
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: Mamba2 SSD (state-space duality) chunked scan.
+
+The SSD decomposition (Dao & Gu 2024): split the sequence into chunks of
+length Tc; within a chunk the recurrence is a masked-decay attention-like
+matmul (MXU work), across chunks only a tiny (P, S) state is carried.  The
+carried state lives in a VMEM scratch that persists across the sequential
+chunk sweep of the grid.
+
+Grid: (batch, heads, n_chunks) with chunks minor, so each (b, h) pair sweeps
+its chunks in order; the state scratch is re-initialized at chunk 0.  Head h
+reads B/C from its group g = h % G via the index map (GQA-style grouping).
+
+Per-step VMEM: Tc*P (x) + 2*Tc*S (B, C) + Tc*Tc (decay mask) + P*S (state)
+— Tc=128, P=64, S=128 f32 => ~180 KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xh_ref, dth_ref, ah_ref, bg_ref, cg_ref, dh_ref, y_ref,
+            state_ref):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = xh_ref[0, 0]         # (Tc, P)
+    dt = dth_ref[0, 0]       # (Tc,)
+    A = ah_ref[0, 0]         # scalar (negative)
+    Bm = bg_ref[0, 0]        # (Tc, S)
+    Cm = cg_ref[0, 0]        # (Tc, S)
+    D = dh_ref[0, 0]         # scalar
+
+    a = dt * A                                   # (Tc,) log decay
+    cum = jnp.cumsum(a)                          # (Tc,)
+    Tc = x.shape[0]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (Tc, Tc), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (Tc, Tc), 1)
+    mask = t_idx >= s_idx
+    # mask inside the exp: above-diagonal differences are large positive and
+    # would overflow (NaN-poisoning any AD through this kernel)
+    gate = jnp.exp(jnp.where(mask, cum[:, None] - cum[None, :], -1e30))
+
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Tc, Tc)
+    y_intra = (cb * gate) @ (dt[:, None] * x)              # (Tc, P)
+
+    s0 = state_ref[...]                                    # (P, S)
+    y_inter = jnp.exp(cum)[:, None] * (Cm @ s0.T)          # (Tc, P)
+
+    y_ref[0, 0] = y_intra + y_inter + D * x
+
+    # state update: S_end = exp(cum_T) * S0 + sum_s dt_s e^{cum_T-cum_s} x_s (x) B_s
+    w = dt * jnp.exp(cum[-1] - cum)                        # (Tc,)
+    state_ref[...] = jnp.exp(cum[-1]) * s0 + (w[:, None] * x).T @ Bm
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def ssd_chunked(x, dt, A, B, C, D, chunk: int = 64, interpret: bool = False):
+    """Batched SSD forward.  Shapes as in ``ref.ssd_ref`` plus batch dim:
+
+      x (Bt, L, H, P), dt (Bt, L, H), A (H,), B (Bt, L, G, S),
+      C (Bt, L, G, S), D (H,)  ->  y (Bt, L, H, P).
+
+    L must be a multiple of ``chunk`` (wrapper in ops.py pads).
+    """
+    Bt, L, H, P = x.shape
+    G, S = B.shape[2], B.shape[3]
+    assert L % chunk == 0
+    n_chunks = L // chunk
+    # head-major layouts
+    xh = jnp.transpose(x, (0, 2, 1, 3)).astype(jnp.float32)     # (Bt,H,L,P)
+    dth = jnp.transpose(dt, (0, 2, 1)).astype(jnp.float32)      # (Bt,H,L)
+    bg = jnp.transpose(B, (0, 2, 1, 3)).astype(jnp.float32)     # (Bt,G,L,S)
+    cg = jnp.transpose(C, (0, 2, 1, 3)).astype(jnp.float32)
+    ah = A.astype(jnp.float32)[:, None]                         # (H,1)
+    dh = D.astype(jnp.float32)[:, None]
+
+    grid = (Bt, H, n_chunks)
+    y = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, 1, chunk, S), lambda b, h, c: (b, h % G, c, 0)),
+            pl.BlockSpec((1, 1, chunk, S), lambda b, h, c: (b, h % G, c, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bt, H, L, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((P, S), jnp.float32)],
+        interpret=interpret,
+    )(xh, dth, ah, bg, cg, dh)
+    return jnp.transpose(y, (0, 2, 1, 3))

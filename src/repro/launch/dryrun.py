@@ -1,0 +1,366 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below happens only after the device count is pinned --------
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import numpy as np       # noqa: E402
+import jax               # noqa: E402
+
+from repro.configs import get_config, list_archs                 # noqa: E402
+from repro.launch.mesh import make_production_mesh               # noqa: E402
+from repro.launch.steps import (make_decode_step, make_prefill_step,  # noqa: E402
+                                make_train_step, train_shardings)
+from repro.models import SHAPES, build, input_specs, shape_applicable  # noqa: E402
+from repro.models.config import ModelConfig                      # noqa: E402
+from repro.runtime.hlo_analysis import (parse_collectives,       # noqa: E402
+                                        roofline_terms, PEAK_FLOPS)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Per cell this produces (and persists to experiments/dryrun/*.json):
+
+  * PRODUCTION compile: the full-depth scanned model on the (16,16) pod
+    mesh and the (2,16,16) two-pod mesh — memory_analysis() proves the
+    per-device footprint, the collective census proves the sharding is
+    coherent (correct axes, no accidental full-replication gathers).
+  * COST PROBES (single-pod only): XLA:CPU cost_analysis does not multiply
+    while-loop trip counts (calibrated in _calibrate: a lax.scan body is
+    counted exactly once), so per-layer costs are measured from two or
+    three small UNROLLED probe compiles at the same mesh/shapes and
+    extrapolated linearly to full depth:
+        F(total) = F(fixed) + sum_stack L_stack * F(layer_stack).
+    The same extrapolation covers bytes-accessed and collective link bytes.
+  * Roofline terms (compute/memory/collective, seconds/step/device) from
+    the extrapolated totals + v5e constants, plus MODEL_FLOPS = 6*N*D
+    (resp. 2*N*D for decode) and the useful-compute ratio.
+"""
+
+
+# --------------------------------------------------------------- utilities
+
+def _tree_bytes(tree) -> int:
+    return sum(int(np.prod(s.shape)) * s.dtype.itemsize
+               for s in jax.tree_util.tree_leaves(tree))
+
+
+def _param_count(specs) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree_util.tree_leaves(specs))
+
+
+def _nonembed_param_count(specs) -> int:
+    total = 0
+    for path, s in jax.tree_util.tree_flatten_with_path(specs)[0]:
+        ps = "/".join(str(getattr(k, "key", k)) for k in path)
+        if "table" in ps:
+            continue
+        total += int(np.prod(s.shape))
+    return total
+
+
+def _calibrate() -> dict:
+    """Verify the two cost-analysis facts the methodology relies on."""
+    A = jax.ShapeDtypeStruct((256, 256), jax.numpy.float32)
+    f1 = jax.jit(lambda a, b: a @ b).lower(A, A).compile() \
+        .cost_analysis()["flops"]
+    mac2 = abs(f1 / (2 * 256 ** 3) - 1.0) < 0.05
+
+    W = jax.ShapeDtypeStruct((8, 256, 256), jax.numpy.float32)
+
+    def scanned(x, ws):
+        return jax.lax.scan(lambda h, w: (h @ w, None), x, ws)[0]
+
+    f2 = jax.jit(scanned).lower(A, W).compile().cost_analysis()["flops"]
+    loop_once = abs(f2 / (2 * 256 ** 3) - 1.0) < 0.05
+    return {"mac_is_2flops": bool(mac2),
+            "scan_body_counted_once": bool(loop_once)}
+
+
+def _compile_cell(cfg: ModelConfig, shape_name: str, mesh):
+    """Lower+compile the production (scanned) step.  Returns compiled."""
+    kind = SHAPES[shape_name][2]
+    with mesh:
+        if kind == "train":
+            train_step, model, state_specs, state_ps = make_train_step(
+                cfg, mesh)
+            batch_specs, in_sh, out_sh = train_shardings(
+                cfg, mesh, state_ps, shape_name)
+            lowered = jax.jit(train_step, in_shardings=in_sh,
+                              out_shardings=out_sh,
+                              donate_argnums=0).lower(state_specs,
+                                                      batch_specs)
+        elif kind == "prefill":
+            step, arg_specs, in_sh, out_sh = make_prefill_step(
+                cfg, mesh, shape_name)
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*arg_specs)
+        else:
+            step, arg_specs, in_sh, out_sh = make_decode_step(
+                cfg, mesh, shape_name)
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh,
+                              donate_argnums=1).lower(*arg_specs)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _measure(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    coll = parse_collectives(txt)
+    return {
+        "flops_reported": float(ca.get("flops", 0.0)),
+        "bytes_reported": float(ca.get("bytes accessed", 0.0)),
+        "collectives": coll.as_dict(),
+        "link_bytes_reported": coll.link_bytes(),
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "peak_estimate_bytes": int(ma.argument_size_in_bytes
+                                       + ma.output_size_in_bytes
+                                       + ma.temp_size_in_bytes),
+        },
+    }
+
+
+# ------------------------------------------------------------ cost probes
+
+def _probe_variants(cfg: ModelConfig):
+    """(name, probe_cfg, depth_vector) per probe compile + the full depth
+    vector; costs are linear in the depth vector."""
+    u = dict(scan_unroll=True)
+    if cfg.family in ("dense", "vlm", "ssm"):
+        full = np.array([1, cfg.num_layers])
+        mk = lambda L: cfg.with_(num_layers=L, **u)
+        return [("L2", mk(2), np.array([1, 2])),
+                ("L4", mk(4), np.array([1, 4]))], full
+    if cfg.family == "moe":
+        fd = cfg.moe.first_dense_layers
+        full = np.array([1, fd, cfg.num_layers - fd])
+        if fd == 0:
+            mk = lambda m: cfg.with_(num_layers=m, **u)
+            return [("M2", mk(2), np.array([1, 0, 2])),
+                    ("M4", mk(4), np.array([1, 0, 4]))], full
+
+        def mk(d, m):
+            return cfg.with_(
+                num_layers=d + m,
+                moe=dataclasses.replace(cfg.moe, first_dense_layers=d), **u)
+        return [("D2M2", mk(2, 2), np.array([1, 2, 2])),
+                ("D4M2", mk(4, 2), np.array([1, 4, 2])),
+                ("D2M4", mk(2, 4), np.array([1, 2, 4]))], full
+    if cfg.family == "hybrid":
+        e = cfg.hybrid.attn_every
+        full = np.array([1, cfg.num_layers // e])
+        mk = lambda g: cfg.with_(num_layers=g * e, **u)
+        return [("G1", mk(1), np.array([1, 1])),
+                ("G2", mk(2), np.array([1, 2]))], full
+    if cfg.family == "audio":
+        full = np.array([1, cfg.enc_layers, cfg.num_layers])
+
+        def mk(e, d):
+            return cfg.with_(enc_layers=e, num_layers=d, **u)
+        return [("E2D2", mk(2, 2), np.array([1, 2, 2])),
+                ("E4D2", mk(4, 2), np.array([1, 4, 2])),
+                ("E2D4", mk(2, 4), np.array([1, 2, 4]))], full
+    raise ValueError(cfg.family)
+
+
+def _probe_costs(cfg: ModelConfig, shape_name: str, mesh) -> dict:
+    """Extrapolated per-device (flops, bytes, link_bytes) at full depth."""
+    probes, full = _probe_variants(cfg)
+    rows, obs = [], []
+    for name, pcfg, depth in probes:
+        compiled = _compile_cell(pcfg, shape_name, mesh)
+        m = _measure(compiled)
+        rows.append(depth)
+        obs.append([m["flops_reported"], m["bytes_reported"],
+                    m["link_bytes_reported"]])
+        del compiled
+    A = np.stack(rows).astype(np.float64)            # (n_probes, n_terms)
+    Y = np.array(obs)                                # (n_probes, 3)
+    coef, *_ = np.linalg.lstsq(A, Y, rcond=None)     # (n_terms, 3)
+    totals = np.maximum(full.astype(np.float64) @ coef, 0.0)   # (3,)
+    per_layer = {f"stack{i}": coef[i].tolist()
+                 for i in range(1, coef.shape[0])}
+    return {"flops": float(totals[0]), "bytes": float(totals[1]),
+            "link_bytes": float(totals[2]),
+            "fixed": coef[0].tolist(), "per_layer": per_layer,
+            "probes": [p[0] for p in probes]}
+
+
+def _model_flops(cfg: ModelConfig, shape_name: str, specs) -> float:
+    """Analytic MODEL_FLOPS (global per step): 6*N*D train, 2*N*D fwd."""
+    seq, batch, kind = SHAPES[shape_name]
+    n = _nonembed_param_count(specs)
+    if cfg.moe is not None:
+        m = cfg.moe
+        # active experts: top_k + shared of num_experts per MoE layer
+        moe_layers = cfg.num_layers - m.first_dense_layers
+        per_layer_expert = 3 * cfg.d_model * m.d_ff_expert
+        routed_total = moe_layers * m.num_experts * per_layer_expert
+        routed_active = moe_layers * (m.top_k) * per_layer_expert
+        n = n - routed_total + routed_active
+    if kind == "train":
+        return 6.0 * n * seq * batch
+    if kind == "prefill":
+        return 2.0 * n * seq * batch
+    return 2.0 * n * batch           # decode: one token per sequence
+
+
+# ---------------------------------------------------------------- variants
+# §Perf hillclimb stages (EXPERIMENTS.md §Perf): each is a named config
+# transform applied on top of the current code; baselines are the stored
+# pre-optimization records.
+
+def _v_xent(cfg):
+    return cfg.with_(xent_block=8192)
+
+
+def _v_moe_dispatch(cfg):
+    if cfg.moe is None:
+        return cfg
+    return cfg.with_(moe=dataclasses.replace(cfg.moe, impl="dispatch"))
+
+
+def _v_moe_gather(cfg):
+    if cfg.moe is None:
+        return cfg
+    return cfg.with_(moe=dataclasses.replace(cfg.moe, impl="gather"))
+
+
+def _v_moe_dispatch_xent(cfg):
+    return _v_xent(_v_moe_dispatch(cfg))
+
+
+def _v_remat_dots(cfg):
+    return cfg.with_(remat="dots")
+
+
+VARIANTS = {
+    "gqa": lambda c: c,                 # code-level change; rerun baseline
+    "xent": _v_xent,
+    "moe_dispatch": _v_moe_dispatch,
+    "moe_dispatch_xent": _v_moe_dispatch_xent,
+    "moe_gather": _v_moe_gather,
+    "moe_gather_xent_dots": lambda c: _v_remat_dots(_v_xent(_v_moe_gather(c))),
+    "seqpar": lambda c: c.with_(attn_seq_parallel=True),
+    "moe_gather_seqpar_dots": lambda c: _v_remat_dots(
+        _v_moe_gather(c).with_(attn_seq_parallel=True)),
+    "remat_dots": _v_remat_dots,
+    "xent_remat_dots": lambda c: _v_remat_dots(_v_xent(c)),
+}
+
+
+# ------------------------------------------------------------------- main
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             probes: bool, variant: str | None = None) -> dict:
+    cfg = get_config(arch)
+    if variant:
+        cfg = VARIANTS[variant](cfg)
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    out = {"arch": arch, "shape": shape_name, "variant": variant,
+           "mesh": "multi" if multi_pod else "single", "chips": chips}
+    t0 = time.time()
+    compiled = _compile_cell(cfg, shape_name, mesh)
+    out["compile_s"] = round(time.time() - t0, 1)
+    out["status"] = "ok"
+    out["production"] = _measure(compiled)
+    print(compiled.memory_analysis())
+    ca = compiled.cost_analysis() or {}
+    print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+    del compiled
+
+    model = build(cfg)
+    specs = model.param_specs()
+    out["param_count"] = _param_count(specs)
+    out["param_bytes_global"] = _tree_bytes(specs)
+
+    if probes and not multi_pod:
+        t0 = time.time()
+        pc = _probe_costs(cfg, shape_name, mesh)
+        out["probe_s"] = round(time.time() - t0, 1)
+        out["extrapolated"] = pc
+        terms = roofline_terms(pc["flops"], pc["bytes"], pc["link_bytes"])
+        mf = _model_flops(cfg, shape_name, specs)
+        terms["model_flops_global"] = mf
+        terms["model_flops_per_device"] = mf / chips
+        terms["useful_compute_ratio"] = (
+            mf / chips / pc["flops"] if pc["flops"] else 0.0)
+        terms["mfu_upper_bound"] = (
+            (mf / chips / PEAK_FLOPS) / terms["step_lower_bound_s"]
+            if terms["step_lower_bound_s"] else 0.0)
+        out["roofline"] = terms
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default=None, choices=list(VARIANTS))
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cal = _calibrate()
+    print("calibration:", cal)
+    assert cal["mac_is_2flops"] and cal["scan_body_counted_once"], \
+        "cost-analysis conventions changed; probe extrapolation invalid"
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                tag = f"{arch}_{shape_name}_{'multi' if multi else 'single'}"
+                if args.variant:
+                    tag += f"__{args.variant}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip cached] {tag}")
+                    continue
+                print(f"[cell] {tag}", flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, multi,
+                                   probes=not args.no_probes,
+                                   variant=args.variant)
+                except Exception as e:          # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"  -> {rec['status']}"
+                      + (f" compile={rec.get('compile_s')}s"
+                         if rec.get("compile_s") else ""), flush=True)
+    print(f"done; failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,34 @@
+"""Mesh construction.  Everything here is a FUNCTION — importing this
+module never touches jax device state (the dry-run must set XLA_FLAGS
+before the first device query)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The production mesh: one v5e pod (16, 16) = ("data", "model"), or
+    two pods (2, 16, 16) = ("pod", "data", "model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Mesh over the first prod(shape) available devices (the dry-run's
+    512 host devices serve both the 256- and 512-chip meshes)."""
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)} — "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before any jax import")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def single_device_mesh():
+    """(1, 1) mesh for smoke/CPU runs — same code path as production."""
+    return make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,120 @@
+"""Step-function builders shared by the trainer, server and dry-run.
+
+Each builder returns (step_fn, in_shardings, out_shardings, arg_specs) so
+callers can ``jax.jit(step_fn, in_shardings=..., out_shardings=...)
+.lower(*arg_specs).compile()`` — the dry-run path — or run it for real with
+the same shardings (trainer/server)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..models import build, input_specs
+from ..models.config import SHAPES, ModelConfig
+from ..optim import (AdamWConfig, adamw_init, adamw_update,
+                     clip_by_global_norm, warmup_cosine)
+from ..runtime.sharding import (guard_pspec, input_pspecs, opt_state_pspecs,
+                                param_pspecs, to_shardings)
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh,
+                    opt_cfg: Optional[AdamWConfig] = None,
+                    warmup: int = 100, total_steps: int = 10_000):
+    """Full training step: fwd + bwd + clip + schedule + AdamW update."""
+    model = build(cfg)
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr_scale = warmup_cosine(opt["count"], warmup=warmup,
+                                 total=total_steps)
+        new_params, new_opt = adamw_update(grads, opt, params, opt_cfg,
+                                           lr_scale=lr_scale)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr_scale": lr_scale}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    p_specs = model.param_specs()
+    o_specs = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), p_specs)
+    state_specs = {"params": p_specs, "opt": o_specs}
+
+    p_ps = param_pspecs(p_specs, mesh.axis_names, dict(mesh.shape),
+                        head_dim=cfg.hd)
+    state_ps = {"params": p_ps, "opt": opt_state_pspecs(o_specs, p_ps)}
+    batch_specs = input_specs(cfg, "train_4k")
+    return train_step, model, state_specs, state_ps
+
+
+def train_shardings(cfg: ModelConfig, mesh: Mesh, state_ps, shape_name: str):
+    batch_specs = input_specs(cfg, shape_name)
+    batch_ps = input_pspecs(batch_specs, mesh.axis_names, dict(mesh.shape))
+    in_sh = (to_shardings(state_ps, mesh), to_shardings(batch_ps, mesh))
+    out_sh = (to_shardings(state_ps, mesh),
+              to_shardings({"loss": P(), "grad_norm": P(),
+                            "lr_scale": P()}, mesh))
+    return batch_specs, in_sh, out_sh
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, shape_name: str):
+    model = build(cfg)
+    seq, batch, kind = SHAPES[shape_name]
+    assert kind == "prefill"
+
+    def prefill_step(params, batch_in):
+        logits, caches = model.prefill(params, batch_in)
+        return logits, caches
+
+    p_specs = model.param_specs()
+    p_ps = param_pspecs(p_specs, mesh.axis_names, dict(mesh.shape),
+                        head_dim=cfg.hd)
+    batch_specs = input_specs(cfg, shape_name)
+    batch_ps = input_pspecs(batch_specs, mesh.axis_names, dict(mesh.shape))
+
+    out_specs = jax.eval_shape(prefill_step, p_specs, batch_specs)
+    # caches inherit the decode-cache rules
+    cache_ps = input_pspecs({"caches": out_specs[1]}, mesh.axis_names,
+                            dict(mesh.shape))["caches"]
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    logits_ps = guard_pspec(P(dp if dp else None, None, None),
+                            out_specs[0].shape, mesh)
+    in_sh = (to_shardings(p_ps, mesh), to_shardings(batch_ps, mesh))
+    out_sh = (to_shardings(logits_ps, mesh), to_shardings(cache_ps, mesh))
+    return prefill_step, (p_specs, batch_specs), in_sh, out_sh
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, shape_name: str):
+    model = build(cfg)
+    seq, batch, kind = SHAPES[shape_name]
+    assert kind == "decode"
+
+    def decode_step(params, caches, token, cache_index):
+        return model.decode_step(params, caches, token, cache_index)
+
+    p_specs = model.param_specs()
+    p_ps = param_pspecs(p_specs, mesh.axis_names, dict(mesh.shape),
+                        head_dim=cfg.hd)
+    dstate = input_specs(cfg, shape_name)
+    d_ps = input_pspecs(dstate, mesh.axis_names, dict(mesh.shape))
+
+    out_specs = jax.eval_shape(decode_step, p_specs, dstate["caches"],
+                               dstate["token"], dstate["cache_index"])
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    logits_ps = guard_pspec(P(dp if dp else None, None, None),
+                            out_specs[0].shape, mesh)
+    cache_out_ps = input_pspecs({"caches": out_specs[1]}, mesh.axis_names,
+                                dict(mesh.shape))["caches"]
+    in_sh = (to_shardings(p_ps, mesh),
+             to_shardings(d_ps["caches"], mesh),
+             to_shardings(d_ps["token"], mesh),
+             to_shardings(d_ps["cache_index"], mesh))
+    out_sh = (to_shardings(logits_ps, mesh),
+              to_shardings(cache_out_ps, mesh))
+    arg_specs = (p_specs, dstate["caches"], dstate["token"],
+                 dstate["cache_index"])
+    return decode_step, arg_specs, in_sh, out_sh

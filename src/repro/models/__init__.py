@@ -1,0 +1,7 @@
+from .config import (HybridConfig, MLAConfig, MoEConfig, ModelConfig,
+                     SHAPES, SSMConfig)
+from .model import build, input_specs, shape_applicable, shape_kind
+
+__all__ = ["ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig",
+           "HybridConfig", "SHAPES", "build", "input_specs",
+           "shape_applicable", "shape_kind"]

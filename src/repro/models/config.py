@@ -1,0 +1,104 @@
+"""Unified model configuration for the 10 assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0            # shared (always-on) experts
+    first_dense_layers: int = 0    # leading dense layers (deepseek: 3)
+    router_renorm: bool = True     # renormalize top-k weights
+    # 'ragged' = dropless sorted ragged_dot (exact; default);
+    # 'dispatch' = capacity-based dense dispatch einsum — the EP-friendly
+    #   layout GSPMD partitions without gathering expert weights (§Perf,
+    #   llama4 hillclimb).  Drops tokens past capacity.
+    impl: str = "ragged"
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128           # S
+    head_dim: int = 64             # P
+    expand: int = 2                # inner = expand * d_model
+    ngroups: int = 1               # B/C groups (G)
+    conv_width: int = 4
+    chunk: int = 64                # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    attn_every: int = 6            # shared attention block cadence
+    shared_weights: bool = True    # one set of attn/mlp weights reused
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    # enc-dec (audio family): encoder/decoder depths (num_layers == dec)
+    enc_layers: int = 0
+    # modality frontends are STUBS: input_specs() provides precomputed
+    # frame/patch embeddings of this length prepended to the text tokens
+    frontend: Optional[str] = None      # 'vision' | 'audio' | None
+    frontend_len: int = 0
+    dtype: str = "bfloat16"
+    # sub-quadratic attention? (long_500k eligibility, DESIGN.md §4)
+    subquadratic: bool = False
+    remat: str = "full"            # 'full' | 'dots' | 'none' (see lm.py)
+    # fully unroll layer scans (dry-run cost probes: XLA cost_analysis does
+    # not multiply while-loop trip counts, see launch/dryrun.py)
+    scan_unroll: bool = False
+    # blocked head-matmul+cross-entropy vocab block (0 = dense logits);
+    # §Perf optimization, see models/layers.py::blocked_xent
+    xent_block: int = 0
+    # sequence-parallel attention: shard the query sequence over the model
+    # axis instead of heads (the TP fix when H doesn't divide the mesh,
+    # e.g. llama4's 40 heads / internvl's 14 heads over 16; §Perf)
+    attn_seq_parallel: bool = False
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // self.num_heads
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# the four assigned input shapes (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}

@@ -1,0 +1,181 @@
+"""Encoder-decoder transformer (seamless-m4t family).
+
+The modality frontend is a STUB per the assignment: ``input_specs``
+provides precomputed audio frame embeddings (B, enc_len, d) as the encoder
+input; the text decoder is a standard causal transformer with cross
+attention.  Decode caches: self-attn KV (growing) + cross-attn KV
+(computed once from the encoder memory at prefill)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (attention, attention_init, blocked_xent, dense,
+                     dtype_of, embed, embed_init, rmsnorm, rmsnorm_init,
+                     softmax_xent, swiglu, swiglu_init, unembed)
+
+
+def _enc_layer_init(key, cfg, dtype):
+    ka, km = jax.random.split(key)
+    return {"attn_norm": rmsnorm_init(cfg.d_model, dtype),
+            "attn": attention_init(ka, cfg, dtype),
+            "mlp_norm": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": swiglu_init(km, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _dec_layer_init(key, cfg, dtype):
+    ka, kc, km = jax.random.split(key, 3)
+    return {"self_norm": rmsnorm_init(cfg.d_model, dtype),
+            "self_attn": attention_init(ka, cfg, dtype),
+            "cross_norm": rmsnorm_init(cfg.d_model, dtype),
+            "cross_attn": attention_init(kc, cfg, dtype),
+            "mlp_norm": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": swiglu_init(km, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _stack(key, n, mk, cfg, dtype):
+    keys = jax.random.split(key, n)
+    layers = [mk(k, cfg, dtype) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = dtype_of(cfg.dtype)
+
+    def init(self, key):
+        cfg = self.cfg
+        k0, k1, k2, k3 = jax.random.split(key, 4)
+        return {
+            "embed": embed_init(k0, cfg.vocab_size, cfg.d_model, self.dtype),
+            "encoder": _stack(k1, cfg.enc_layers, _enc_layer_init, cfg,
+                              self.dtype),
+            "decoder": _stack(k2, cfg.num_layers, _dec_layer_init, cfg,
+                              self.dtype),
+            "enc_norm": rmsnorm_init(cfg.d_model, self.dtype),
+            "final_norm": rmsnorm_init(cfg.d_model, self.dtype),
+        }
+
+    def param_specs(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    # -------------------------------------------------------------- encode
+    def encode(self, params, frames):
+        """frames: (B, enc_len, d) stub embeddings -> encoder memory."""
+        cfg = self.cfg
+        B, S, _ = frames.shape
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+        full = jnp.ones((1, 1, S, S), bool)          # bidirectional
+
+        def body(h, layer_p):
+            a, _ = attention(layer_p["attn"], cfg,
+                             rmsnorm(layer_p["attn_norm"], h), positions,
+                             mask=full)
+            h = h + a
+            h = h + swiglu(layer_p["mlp"], rmsnorm(layer_p["mlp_norm"], h))
+            return h, None
+
+        fn = jax.checkpoint(body) if cfg.remat != "none" else body
+        h, _ = jax.lax.scan(fn, frames.astype(self.dtype),
+                            params["encoder"], unroll=cfg.scan_unroll)
+        return rmsnorm(params["enc_norm"], h)
+
+    # -------------------------------------------------------------- decode
+    def _dec_layer(self, p, x, positions, memory, self_cache=None,
+                   cache_index=None, cross_kv=None):
+        cfg = self.cfg
+        a, new_self = attention(p["self_attn"], cfg,
+                                rmsnorm(p["self_norm"], x), positions,
+                                cache=self_cache, cache_index=cache_index)
+        x = x + a
+        h = rmsnorm(p["cross_norm"], x)
+        if cross_kv is not None:
+            # decode: use precomputed cross K/V (MQA-style gather-free)
+            c, _ = attention(p["cross_attn"], cfg, h, positions,
+                             cache=None, x_kv=memory)
+        else:
+            c, _ = attention(p["cross_attn"], cfg, h, positions,
+                             x_kv=memory)
+        x = x + c
+        x = x + swiglu(p["mlp"], rmsnorm(p["mlp_norm"], x))
+        return x, new_self
+
+    def _decoder(self, params, tokens, memory, positions):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens)
+
+        def body(h, layer_p):
+            h, self_cache = self._dec_layer(layer_p, h, positions, memory)
+            return h, self_cache
+
+        fn = jax.checkpoint(body) if cfg.remat != "none" else body
+        x, caches = jax.lax.scan(fn, x, params["decoder"],
+                                 unroll=cfg.scan_unroll)
+        return rmsnorm(params["final_norm"], x), caches
+
+    def loss(self, params, batch):
+        """batch: frames (B,F,d), tokens (B,S), labels (B,S)."""
+        memory = self.encode(params, batch["frames"])
+        B, S = batch["tokens"].shape
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+        x, _ = self._decoder(params, batch["tokens"], memory, positions)
+        if self.cfg.xent_block:
+            return blocked_xent(x[:, :-1], params["embed"]["table"],
+                                batch["labels"][:, 1:], self.cfg.xent_block)
+        logits = unembed(params["embed"], x)
+        return softmax_xent(logits[:, :-1], batch["labels"][:, 1:])
+
+    # ------------------------------------------------------------- serving
+    def cache_specs(self, batch: int, max_seq: int, enc_len: int = 0):
+        cfg = self.cfg
+        L = cfg.num_layers
+        enc_len = enc_len or cfg.frontend_len
+        kv = (L, batch, max_seq, cfg.num_kv_heads, cfg.hd)
+        return {"k": jax.ShapeDtypeStruct(kv, self.dtype),
+                "v": jax.ShapeDtypeStruct(kv, self.dtype),
+                "memory": jax.ShapeDtypeStruct(
+                    (batch, enc_len, cfg.d_model), self.dtype)}
+
+    def init_cache(self, batch: int, max_seq: int, enc_len: int = 0):
+        return jax.tree_util.tree_map(
+            lambda sp: jnp.zeros(sp.shape, sp.dtype),
+            self.cache_specs(batch, max_seq, enc_len))
+
+    def prefill(self, params, batch, max_seq=None):
+        memory = self.encode(params, batch["frames"])
+        B, S = batch["tokens"].shape
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+        x, caches = self._decoder(params, batch["tokens"], memory, positions)
+        if max_seq is not None and max_seq > S:
+            caches = jax.tree_util.tree_map(
+                lambda c: jnp.pad(
+                    c, [(0, 0), (0, 0), (0, max_seq - S), (0, 0), (0, 0)]),
+                caches)
+        logits = unembed(params["embed"], x[:, -1:])
+        return logits, {"k": caches["k"], "v": caches["v"],
+                        "memory": memory}
+
+    def decode_step(self, params, caches, token, cache_index):
+        cfg = self.cfg
+        x = embed(params["embed"], token)
+        B = x.shape[0]
+        positions = jnp.full((B, 1), cache_index, jnp.int32)
+        memory = caches["memory"]
+
+        def body(h, xs):
+            layer_p, self_cache = xs
+            h, new_self = self._dec_layer(
+                layer_p, h, positions, memory, self_cache=self_cache,
+                cache_index=cache_index, cross_kv=True)
+            return h, new_self
+
+        x, new_kv = jax.lax.scan(
+            body, x, (params["decoder"], {"k": caches["k"],
+                                          "v": caches["v"]}),
+            unroll=self.cfg.scan_unroll)
+        x = rmsnorm(params["final_norm"], x)
+        logits = unembed(params["embed"], x)
+        return logits, {"k": new_kv["k"], "v": new_kv["v"],
+                        "memory": memory}

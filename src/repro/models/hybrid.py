@@ -1,0 +1,182 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention block.
+
+The assigned zamba2-2.7b config: 54 mamba2 layers (ssm_state=64); one
+transformer block (32 heads, d_ff=10240) whose weights are SHARED across
+its periodic applications (every ``attn_every`` = 6 mamba layers -> 9
+applications, each with its own KV cache).  Deviation noted in
+configs/zamba2_2p7b.py: the original concatenates the raw embedding and
+applies per-invocation LoRA; we apply the shared block on the residual
+stream directly.
+
+Structure: scan over 9 groups; each group = inner scan over 6 mamba blocks,
+then the shared attention+MLP block."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (attention, attention_init, blocked_xent, dtype_of,
+                     embed, embed_init, rmsnorm, rmsnorm_init, softmax_xent,
+                     swiglu, swiglu_init, unembed)
+from .ssm_lm import _block_apply, _block_decode, _block_init
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = dtype_of(cfg.dtype)
+        self.every = cfg.hybrid.attn_every
+        assert cfg.num_layers % self.every == 0
+        self.n_groups = cfg.num_layers // self.every
+
+    def init(self, key):
+        cfg = self.cfg
+        k0, k1, k2, k3, k4 = jax.random.split(key, 5)
+        keys = jax.random.split(k1, cfg.num_layers)
+        layers = [_block_init(k, cfg, self.dtype) for k in keys]
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+        # reshape to (groups, every, ...)
+        stacked = jax.tree_util.tree_map(
+            lambda x: x.reshape((self.n_groups, self.every) + x.shape[1:]),
+            stacked)
+        params = {
+            "embed": embed_init(k0, cfg.vocab_size, cfg.d_model, self.dtype),
+            "mamba": stacked,
+            "shared": {
+                "attn_norm": rmsnorm_init(cfg.d_model, self.dtype),
+                "attn": attention_init(k2, cfg, self.dtype),
+                "mlp_norm": rmsnorm_init(cfg.d_model, self.dtype),
+                "mlp": swiglu_init(k3, cfg.d_model, cfg.d_ff, self.dtype),
+            },
+            "final_norm": rmsnorm_init(cfg.d_model, self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            out = jax.random.normal(k4, (cfg.d_model, cfg.vocab_size),
+                                    jnp.float32) * cfg.d_model ** -0.5
+            params["out"] = {"table": out.T.astype(self.dtype)}
+        return params
+
+    def param_specs(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    def _logits(self, params, x):
+        head = params["embed"] if self.cfg.tie_embeddings or \
+            "out" not in params else params["out"]
+        return unembed(head, x)
+
+    def _shared_block(self, shared, x, positions, cache=None,
+                      cache_index=None):
+        h = rmsnorm(shared["attn_norm"], x)
+        a, new_cache = attention(shared["attn"], self.cfg, h, positions,
+                                 cache=cache, cache_index=cache_index)
+        x = x + a
+        x = x + swiglu(shared["mlp"], rmsnorm(shared["mlp_norm"], x))
+        return x, new_cache
+
+    def _backbone(self, params, x, positions):
+        cfg = self.cfg
+        shared = params["shared"]
+
+        def group(h, group_p):
+            def inner(hh, layer_p):
+                hh, cache = _block_apply(layer_p, cfg, hh)
+                return hh, cache
+
+            fn = jax.checkpoint(inner) if cfg.remat != "none" else inner
+            h, m_caches = jax.lax.scan(fn, h, group_p,
+                                       unroll=cfg.scan_unroll)
+            h, a_cache = self._shared_block(shared, h, positions)
+            return h, (m_caches, a_cache)
+
+        x, (m_caches, a_caches) = jax.lax.scan(group, x, params["mamba"],
+                                               unroll=cfg.scan_unroll)
+        return rmsnorm(params["final_norm"], x), m_caches, a_caches
+
+    def loss(self, params, batch):
+        x = embed(params["embed"], batch["tokens"])
+        B, S, _ = x.shape
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+        x, _, _ = self._backbone(params, x, positions)
+        if self.cfg.xent_block:
+            head = params["embed"] if self.cfg.tie_embeddings or \
+                "out" not in params else params["out"]
+            return blocked_xent(x[:, :-1], head["table"],
+                                batch["labels"][:, 1:], self.cfg.xent_block)
+        logits = self._logits(params, x)
+        return softmax_xent(logits[:, :-1], batch["labels"][:, 1:])
+
+    # ------------------------------------------------------------- serving
+    def cache_specs(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        s = cfg.ssm
+        inner = s.expand * cfg.d_model
+        H = inner // s.head_dim
+        gs = s.ngroups * s.state_dim
+        G, E = self.n_groups, self.every
+        K = s.conv_width
+        return {
+            "ssm": jax.ShapeDtypeStruct(
+                (G, E, batch, H, s.head_dim, s.state_dim), jnp.float32),
+            "cx": jax.ShapeDtypeStruct((G, E, batch, K - 1, inner),
+                                       self.dtype),
+            "cb": jax.ShapeDtypeStruct((G, E, batch, K - 1, gs), self.dtype),
+            "cc": jax.ShapeDtypeStruct((G, E, batch, K - 1, gs), self.dtype),
+            "k": jax.ShapeDtypeStruct(
+                (G, batch, max_seq, cfg.num_kv_heads, cfg.hd), self.dtype),
+            "v": jax.ShapeDtypeStruct(
+                (G, batch, max_seq, cfg.num_kv_heads, cfg.hd), self.dtype),
+        }
+
+    def init_cache(self, batch: int, max_seq: int):
+        return jax.tree_util.tree_map(
+            lambda sp: jnp.zeros(sp.shape, sp.dtype),
+            self.cache_specs(batch, max_seq))
+
+    def prefill(self, params, batch, max_seq=None):
+        x = embed(params["embed"], batch["tokens"])
+        B, S, _ = x.shape
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+        x, m_caches, a_caches = self._backbone(params, x, positions)
+        if max_seq is not None and max_seq > S:
+            a_caches = jax.tree_util.tree_map(
+                lambda c: jnp.pad(
+                    c, [(0, 0), (0, 0), (0, max_seq - S), (0, 0), (0, 0)]),
+                a_caches)
+        caches = {"ssm": m_caches["ssm"], "cx": m_caches["cx"],
+                  "cb": m_caches["cb"], "cc": m_caches["cc"],
+                  "k": a_caches["k"], "v": a_caches["v"]}
+        return self._logits(params, x[:, -1:]), caches
+
+    def decode_step(self, params, caches, token, cache_index):
+        cfg = self.cfg
+        x = embed(params["embed"], token)
+        B = x.shape[0]
+        positions = jnp.full((B, 1), cache_index, jnp.int32)
+        shared = params["shared"]
+
+        def group(h, xs):
+            group_p, m_cache, kv = xs
+
+            def inner(hh, ys):
+                layer_p, cache = ys
+                hh, new = _block_decode(layer_p, cfg, hh, cache)
+                return hh, new
+
+            h, new_m = jax.lax.scan(inner, h, (group_p, m_cache),
+                                    unroll=cfg.scan_unroll)
+            h, new_kv = self._shared_block(shared, h, positions, cache=kv,
+                                           cache_index=cache_index)
+            return h, (new_m, new_kv)
+
+        m_caches = {"ssm": caches["ssm"], "cx": caches["cx"],
+                    "cb": caches["cb"], "cc": caches["cc"]}
+        kv = {"k": caches["k"], "v": caches["v"]}
+        x, (new_m, new_kv) = jax.lax.scan(
+            group, x, (params["mamba"], m_caches, kv),
+            unroll=cfg.scan_unroll)
+        x = rmsnorm(params["final_norm"], x)
+        caches = {"ssm": new_m["ssm"], "cx": new_m["cx"],
+                  "cb": new_m["cb"], "cc": new_m["cc"],
+                  "k": new_kv["k"], "v": new_kv["v"]}
+        return self._logits(params, x), caches

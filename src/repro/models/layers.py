@@ -1,0 +1,275 @@
+"""Transformer building blocks in pure JAX (no flax).
+
+Conventions:
+  * parameters are nested dicts of jnp arrays; init fns take an rng key and
+    return the dict; apply fns take (params, inputs, ...);
+  * all matmuls run in the config dtype (bf16 on TPU); norms, softmax and
+    rope run in fp32; logits/loss in fp32;
+  * attention layout: (batch, seq, heads, head_dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------- util
+
+def maybe_constrain(x, *spec):
+    """with_sharding_constraint when a mesh is in context; identity
+    otherwise (smoke tests / single-host runs have no mesh)."""
+    import jax as _jax
+    from jax.sharding import PartitionSpec as _P
+    try:
+        return _jax.lax.with_sharding_constraint(x, _P(*spec))
+    except (RuntimeError, ValueError):
+        return x
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    return {"w": w.astype(dtype)}
+
+
+def dense(params, x):
+    return x @ params["w"]
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    tbl = jax.random.normal(key, (vocab, d), jnp.float32) * (d ** -0.5)
+    return {"table": tbl.astype(dtype)}
+
+
+def embed(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def unembed(params, x):
+    """Logits in fp32 (params may be the tied embedding)."""
+    return (x.astype(jnp.float32) @
+            params["table"].astype(jnp.float32).T)
+
+
+# --------------------------------------------------------------------- rope
+
+def rope_angles(positions, dim: int, theta: float):
+    """positions (...,) -> (..., dim/2) angles."""
+    freqs = theta ** (-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    ang = rope_angles(positions, hd, theta)          # (B, S, hd/2)
+    if ang.ndim == 2:                                 # (S, hd/2)
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+def attention_init(key, cfg, dtype, d_in: Optional[int] = None):
+    d = d_in if d_in is not None else cfg.d_model
+    hd = cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.num_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.num_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.num_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,Sq,H,hd); k/v: (B,Sk,KV,hd), expanded to H by head-map gather.
+
+    §Perf note (EXPERIMENTS.md, tinyllama iterations 1-2): a grouped-einsum
+    formulation (q reshaped to (KV, rep)) was tried and REFUTED — neither
+    (KV) nor (rep) divides a 16-way model axis for the GQA archs, so GSPMD
+    resharded every layer regardless.  The working layout: KV projections
+    replicated over the model axis when KV heads don't shard cleanly
+    (runtime/sharding.py head-granular rules) and the head expansion done
+    by gather from the replicated source, which partitions on the expanded
+    H dim."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    h_to_g = jnp.arange(H) // (H // KV)
+    k = jnp.take(k, h_to_g, axis=2)
+    v = jnp.take(v, h_to_g, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    logits = logits * (hd ** -0.5)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attention(params, cfg, x, positions, *, mask=None, cache=None,
+              cache_index=None, x_kv=None):
+    """GQA/MQA attention.
+
+    Training/prefill: x (B,S,d), causal mask, returns (out, new_cache or None).
+    Decode: x (B,1,d), cache = dict(k,v: (B,Smax,KV,hd)), cache_index scalar
+    step; writes the new KV at cache_index and attends over [0, cache_index].
+    Cross-attention: pass x_kv (B,Sk,d) and mask=None (full visibility);
+    cache then holds the static encoder KV.
+    """
+    hd = cfg.hd
+    B, S, _ = x.shape
+    q = dense(params["wq"], x).reshape(B, S, cfg.num_heads, hd)
+    src = x if x_kv is None else x_kv
+    k = dense(params["wk"], src).reshape(B, src.shape[1], cfg.num_kv_heads, hd)
+    v = dense(params["wv"], src).reshape(B, src.shape[1], cfg.num_kv_heads, hd)
+
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+
+    if x_kv is None:  # self-attention: rope
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kv_pos = positions if cache is None else positions
+        k = apply_rope(k, kv_pos, cfg.rope_theta)
+
+    if cache is not None and cache_index is not None:
+        # decode: append at cache_index
+        k_all = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+        Smax = k_all.shape[1]
+        visible = jnp.arange(Smax)[None, None, None, :] <= cache_index
+        out = _sdpa(q, k_all, v_all, visible)
+        new_cache = {"k": k_all, "v": v_all}
+    elif x_kv is not None:
+        # cross-attention (full visibility over encoder states)
+        Sk = src.shape[1]
+        full = jnp.ones((1, 1, S, Sk), bool)
+        out = _sdpa(q, k, v, full)
+        new_cache = None
+    else:
+        if mask is None:
+            mask = jnp.tril(jnp.ones((S, S), bool))[None, None]
+        if getattr(cfg, "attn_seq_parallel", False):
+            # context parallelism: queries sharded over 'model' along S,
+            # compact K/V replicated over 'model' (gathered once; the
+            # (S, S) score tile shrinks by the TP degree) — §Perf llama4.
+            q = maybe_constrain(q, "data", "model", None, None)
+            k = maybe_constrain(k, "data", None, None, None)
+            v = maybe_constrain(v, "data", None, None, None)
+        out = _sdpa(q, k, v, mask)
+        if getattr(cfg, "attn_seq_parallel", False):
+            out = maybe_constrain(out, "data", "model", None, None)
+        new_cache = {"k": k, "v": v}
+    out = out.reshape(B, S, cfg.num_heads * hd)
+    out = dense(params["wo"], out)
+    if x_kv is None and cache is None and \
+            getattr(cfg, "attn_seq_parallel", False):
+        out = maybe_constrain(out, "data", None, None)   # restore layout
+    return out, new_cache
+
+
+# --------------------------------------------------------------------- mlp
+
+def swiglu_init(key, d: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d, d_ff, dtype),
+        "w_up": dense_init(ks[1], d, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d, dtype),
+    }
+
+
+def swiglu(params, x):
+    g = jax.nn.silu(dense(params["w_gate"], x).astype(jnp.float32))
+    u = dense(params["w_up"], x).astype(jnp.float32)
+    return dense(params["w_down"], (g * u).astype(x.dtype))
+
+
+# -------------------------------------------------------------------- loss
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean next-token cross entropy in fp32.  labels -100 => ignored."""
+    valid = labels >= 0 if mask is None else mask
+    labels_safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None],
+                               axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+
+
+def blocked_xent(x, head_table, labels, block: int = 8192):
+    """Cross entropy WITHOUT materializing the (B, S, V) logits.
+
+    §Perf optimization (EXPERIMENTS.md): the fused head-matmul+loss scans
+    the vocabulary in blocks of ``block`` columns, keeping a running
+    streaming logsumexp and gathering the gold logit on the fly; each block
+    body is rematerialized in the backward pass.  Peak logits memory drops
+    from O(B*S*V) fp32 (67 GB/device for the 256k-vocab archs at train_4k)
+    to O(B*S*block).
+
+    x: (B, S, d) final hidden states;  head_table: (V, d);  labels (B, S).
+    """
+    B, S, d = x.shape
+    V = head_table.shape[0]
+    pad = (-V) % block
+    n_blocks = (V + pad) // block
+    if pad:   # dynamic_slice clamps at the boundary — pad explicitly
+        head_table = jnp.pad(head_table, ((0, pad), (0, 0)))
+    xf = x.astype(jnp.float32).reshape(B * S, d)
+    valid = labels >= 0
+    lab = jnp.maximum(labels, 0).reshape(B * S)
+
+    def body(carry, i):
+        m, lse, gold = carry
+        tbl = jax.lax.dynamic_slice_in_dim(
+            head_table, i * block, block, axis=0).astype(jnp.float32)
+        logits = xf @ tbl.T                                   # (BS, block)
+        cols = i * block + jnp.arange(block)
+        logits = jnp.where(cols[None, :] < V, logits, -1e30)
+        bmax = jnp.max(logits, axis=-1)
+        new_m = jnp.maximum(m, bmax)
+        lse = jnp.exp(m - new_m) * lse + jnp.sum(
+            jnp.exp(logits - new_m[:, None]), axis=-1)
+        hit = (lab >= i * block) & (lab < (i + 1) * block)
+        local = jnp.take_along_axis(
+            logits, jnp.clip(lab - i * block, 0, block - 1)[:, None],
+            axis=1)[:, 0]
+        gold = jnp.where(hit, local, gold)
+        return (new_m, lse, gold), None
+
+    init = (jnp.full((B * S,), -1e30), jnp.zeros((B * S,)),
+            jnp.zeros((B * S,)))
+    (m, lse, gold), _ = jax.lax.scan(jax.checkpoint(body), init,
+                                     jnp.arange(n_blocks))
+    logz = m + jnp.log(jnp.maximum(lse, 1e-30))
+    nll = (logz - gold).reshape(B, S) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)

@@ -1,0 +1,265 @@
+"""Decoder-only LM assembly (dense / MoE / MLA / qk-norm families).
+
+Layers are stacked (leading L dim on every leaf) and applied with
+``lax.scan`` — this keeps the HLO size O(1) in depth (critical for 61-88
+layer dry-run compiles) and is the idiom XLA pipelines best.  Remat policy
+per config: 'full' (checkpoint everything at layer boundaries), 'dots'
+(save MXU outputs), 'none'.
+
+Three entry points per model:
+  loss(params, batch)                          train_4k
+  prefill(params, tokens[, prefix])            prefill_32k -> (logits, cache)
+  decode_step(params, cache, token, index)     decode_32k / long_500k
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (attention, attention_init, blocked_xent, dtype_of,
+                     embed, embed_init, rmsnorm, rmsnorm_init, softmax_xent,
+                     swiglu, swiglu_init, unembed)
+from .mla import mla_attention, mla_decode, mla_init
+from .moe import moe_ffn, moe_init
+
+
+# ----------------------------------------------------------------- layers
+
+def _layer_init(key, cfg: ModelConfig, dtype, moe_layer: bool):
+    ka, km = jax.random.split(key)
+    p = {"attn_norm": rmsnorm_init(cfg.d_model, dtype),
+         "mlp_norm": rmsnorm_init(cfg.d_model, dtype)}
+    if cfg.mla is not None:
+        p["attn"] = mla_init(ka, cfg, dtype)
+    else:
+        p["attn"] = attention_init(ka, cfg, dtype)
+    if moe_layer:
+        p["moe"] = moe_init(km, cfg.d_model, cfg.moe, dtype)
+    else:
+        p["mlp"] = swiglu_init(km, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _layer_apply(p, cfg: ModelConfig, x, positions, *, moe_layer: bool,
+                 mask=None, cache=None, cache_index=None):
+    h = rmsnorm(p["attn_norm"], x)
+    if cfg.mla is not None:
+        if cache is not None and cache_index is not None:
+            a, new_cache = mla_decode(p["attn"], cfg, h, cache, cache_index,
+                                      positions)
+        else:
+            a, new_cache = mla_attention(p["attn"], cfg, h, positions,
+                                         mask=mask)
+    else:
+        a, new_cache = attention(p["attn"], cfg, h, positions, mask=mask,
+                                 cache=cache, cache_index=cache_index)
+    x = x + a
+    h = rmsnorm(p["mlp_norm"], x)
+    if moe_layer:
+        f, aux = moe_ffn(p["moe"], h, cfg.moe)
+    else:
+        f, aux = swiglu(p["mlp"], h), {"lb_loss": jnp.float32(0.0)}
+    return x + f, new_cache, aux
+
+
+def _stack_init(key, cfg, dtype, n_layers: int, moe_layer: bool):
+    keys = jax.random.split(key, max(n_layers, 1))
+    layers = [_layer_init(k, cfg, dtype, moe_layer) for k in keys[:n_layers]]
+    if not layers:
+        return None
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _scan_stack(stacked, cfg, x, positions, *, moe_layer, mask):
+    """Train/prefill scan over a homogeneous layer stack.  Returns
+    (x, stacked caches, aux sum)."""
+    def body(carry, layer_p):
+        h = carry
+        h, cache, aux = _layer_apply(layer_p, cfg, h, positions,
+                                     moe_layer=moe_layer, mask=mask)
+        return h, (cache, aux["lb_loss"])
+
+    x, (caches, lb) = jax.lax.scan(_remat(body, cfg), x, stacked,
+                                   unroll=cfg.scan_unroll)
+    return x, caches, jnp.sum(lb)
+
+
+def _scan_decode(stacked, cfg, x, positions, caches, cache_index, *,
+                 moe_layer):
+    def body(carry, xs):
+        h = carry
+        layer_p, cache = xs
+        h, new_cache, _ = _layer_apply(layer_p, cfg, h, positions,
+                                       moe_layer=moe_layer, cache=cache,
+                                       cache_index=cache_index)
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (stacked, caches),
+                                 unroll=cfg.scan_unroll)
+    return x, new_caches
+
+
+# ------------------------------------------------------------------ model
+
+class DecoderLM:
+    """Decoder-only LM; families: dense, moe (w/ MLA), vlm (prefix stub)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = dtype_of(cfg.dtype)
+        m = cfg.moe
+        self.n_dense = (cfg.num_layers if m is None
+                        else m.first_dense_layers)
+        self.n_moe = 0 if m is None else cfg.num_layers - self.n_dense
+
+    # -------------------------------------------------------------- params
+    def init(self, key):
+        cfg = self.cfg
+        k0, k1, k2, k3 = jax.random.split(key, 4)
+        params = {"embed": embed_init(k0, cfg.vocab_size, cfg.d_model,
+                                      self.dtype),
+                  "final_norm": rmsnorm_init(cfg.d_model, self.dtype)}
+        if self.n_dense:
+            params["dense_layers"] = _stack_init(k1, cfg, self.dtype,
+                                                 self.n_dense, False)
+        if self.n_moe:
+            params["moe_layers"] = _stack_init(k2, cfg, self.dtype,
+                                               self.n_moe, True)
+        if not cfg.tie_embeddings:
+            out = jax.random.normal(k3, (cfg.d_model, cfg.vocab_size),
+                                    jnp.float32) * cfg.d_model ** -0.5
+            params["out"] = {"table": out.T.astype(self.dtype)}
+        return params
+
+    def param_specs(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    # ------------------------------------------------------------- forward
+    def _backbone(self, params, x, positions, mask):
+        cfg = self.cfg
+        lb_total = jnp.float32(0.0)
+        caches = {}
+        if self.n_dense:
+            x, c, lb = _scan_stack(params["dense_layers"], cfg, x, positions,
+                                   moe_layer=False, mask=mask)
+            caches["dense"] = c
+            lb_total += lb
+        if self.n_moe:
+            x, c, lb = _scan_stack(params["moe_layers"], cfg, x, positions,
+                                   moe_layer=True, mask=mask)
+            caches["moe"] = c
+            lb_total += lb
+        x = rmsnorm(params["final_norm"], x)
+        return x, caches, lb_total
+
+    def _logits(self, params, x):
+        head = params["embed"] if self.cfg.tie_embeddings or \
+            "out" not in params else params["out"]
+        return unembed(head, x)
+
+    def _embed_inputs(self, params, batch):
+        """Tokens (+ optional modality-stub prefix embeddings)."""
+        x = embed(params["embed"], batch["tokens"])
+        if self.cfg.frontend is not None:
+            x = jnp.concatenate(
+                [batch["prefix"].astype(x.dtype), x], axis=1)
+        return x
+
+    # ---------------------------------------------------------------- loss
+    def loss(self, params, batch):
+        """batch: tokens (B,S) int32, labels (B,S) int32 (-100 = pad),
+        optional prefix (B,F,d)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+        x, _, lb = self._backbone(params, x, positions, None)
+        if cfg.frontend is not None:        # loss only on the text region
+            x = x[:, -batch["tokens"].shape[1]:]
+        if cfg.xent_block:
+            head = params["embed"] if cfg.tie_embeddings or \
+                "out" not in params else params["out"]
+            loss = blocked_xent(x[:, :-1], head["table"],
+                                batch["labels"][:, 1:], cfg.xent_block)
+        else:
+            logits = self._logits(params, x)
+            loss = softmax_xent(logits[:, :-1], batch["labels"][:, 1:])
+        return loss + 0.01 * lb
+
+    # ------------------------------------------------------------- serving
+    def cache_specs(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        dt = self.dtype
+
+        def attn_cache(n):
+            if cfg.mla is not None:
+                return {"ckv": jax.ShapeDtypeStruct(
+                            (n, batch, max_seq, cfg.mla.kv_lora_rank), dt),
+                        "k_rope": jax.ShapeDtypeStruct(
+                            (n, batch, max_seq, cfg.mla.qk_rope_dim), dt)}
+            return {"k": jax.ShapeDtypeStruct(
+                        (n, batch, max_seq, cfg.num_kv_heads, cfg.hd), dt),
+                    "v": jax.ShapeDtypeStruct(
+                        (n, batch, max_seq, cfg.num_kv_heads, cfg.hd), dt)}
+
+        specs = {}
+        if self.n_dense:
+            specs["dense"] = attn_cache(self.n_dense)
+        if self.n_moe:
+            specs["moe"] = attn_cache(self.n_moe)
+        return specs
+
+    def init_cache(self, batch: int, max_seq: int):
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.cache_specs(
+                batch, max_seq))
+
+    def prefill(self, params, batch, max_seq: Optional[int] = None):
+        """Full-sequence forward; returns (last logits, cache padded to
+        max_seq)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+        x, caches, _ = self._backbone(params, x, positions, None)
+        logits = self._logits(params, x[:, -1:])
+        if max_seq is not None and max_seq > S:
+            def pad(c):
+                return jnp.pad(
+                    c, [(0, 0), (0, 0), (0, max_seq - S)]
+                    + [(0, 0)] * (c.ndim - 3))
+            caches = jax.tree_util.tree_map(pad, caches)
+        return logits, caches
+
+    def decode_step(self, params, caches, token, cache_index):
+        """token (B,1) int32; caches as from prefill/init_cache;
+        cache_index: scalar int32 position to write."""
+        cfg = self.cfg
+        x = embed(params["embed"], token)
+        B = x.shape[0]
+        positions = jnp.full((B, 1), cache_index, jnp.int32)
+        new = {}
+        if self.n_dense:
+            x, c = _scan_decode(params["dense_layers"], cfg, x, positions,
+                                caches["dense"], cache_index,
+                                moe_layer=False)
+            new["dense"] = c
+        if self.n_moe:
+            x, c = _scan_decode(params["moe_layers"], cfg, x, positions,
+                                caches["moe"], cache_index, moe_layer=True)
+            new["moe"] = c
+        x = rmsnorm(params["final_norm"], x)
+        return self._logits(params, x), new

@@ -1,0 +1,119 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and KV are projected through low-rank bottlenecks; only the
+compressed KV latent (kv_lora_rank) plus a shared rope key (qk_rope_dim) is
+cached.  Decode uses the *absorbed* formulation: the per-head up-projections
+fold into the query/output sides, so decoding attends MQA-style over the
+(S, kv_lora + rope) cache — the memory win that makes 32k/500k KV caches
+feasible (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import MLAConfig, ModelConfig
+from .layers import apply_rope, dense, dense_init, rmsnorm, rmsnorm_init
+
+
+def mla_init(key, cfg: ModelConfig, dtype):
+    m: MLAConfig = cfg.mla
+    H = cfg.num_heads
+    ks = jax.random.split(key, 6)
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq_down": dense_init(ks[0], cfg.d_model, m.q_lora_rank, dtype),
+        "q_norm": rmsnorm_init(m.q_lora_rank, dtype),
+        "wq_up": dense_init(ks[1], m.q_lora_rank, H * qk, dtype),
+        "wkv_down": dense_init(ks[2], cfg.d_model,
+                               m.kv_lora_rank + m.qk_rope_dim, dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "wkv_up": dense_init(ks[3], m.kv_lora_rank,
+                             H * (m.qk_nope_dim + m.v_dim), dtype),
+        "wo": dense_init(ks[4], H * m.v_dim, cfg.d_model, dtype),
+    }
+
+
+def _project_q(params, cfg, x, positions):
+    m = cfg.mla
+    H = cfg.num_heads
+    B, S, _ = x.shape
+    q_lat = rmsnorm(params["q_norm"], dense(params["wq_down"], x))
+    q = dense(params["wq_up"], q_lat).reshape(
+        B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(params, cfg, x, positions):
+    m = cfg.mla
+    kv = dense(params["wkv_down"], x)
+    ckv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    ckv = rmsnorm(params["kv_norm"], ckv)
+    # shared-across-heads rope key: (B, S, 1, rope) for rope application
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return ckv, k_rope
+
+
+def mla_attention(params, cfg: ModelConfig, x, positions, mask=None):
+    """Training/prefill path (full materialization).  Returns (out, cache)."""
+    m = cfg.mla
+    H = cfg.num_heads
+    B, S, _ = x.shape
+    q_nope, q_rope = _project_q(params, cfg, x, positions)
+    ckv, k_rope = _project_kv_latent(params, cfg, x, positions)
+
+    kv = dense(params["wkv_up"], ckv).reshape(
+        B, S, H, m.qk_nope_dim + m.v_dim)
+    k_nope, v = jnp.split(kv, [m.qk_nope_dim], axis=-1)
+
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    logits = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope)
+              ).astype(jnp.float32) * scale
+    if mask is None:
+        mask = jnp.tril(jnp.ones((S, S), bool))[None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    out = dense(params["wo"], out.reshape(B, S, H * m.v_dim))
+    return out, {"ckv": ckv, "k_rope": k_rope}
+
+
+def mla_decode(params, cfg: ModelConfig, x, cache, cache_index, positions):
+    """Absorbed MQA-style decode over the compressed cache.
+
+    cache: {ckv (B, Smax, kv_lora), k_rope (B, Smax, rope)}.
+    """
+    m = cfg.mla
+    H = cfg.num_heads
+    B, S, _ = x.shape                     # S == 1
+    q_nope, q_rope = _project_q(params, cfg, x, positions)
+    ckv_new, k_rope_new = _project_kv_latent(params, cfg, x, positions)
+    ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, cache_index, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
+        (0, cache_index, 0))
+
+    # absorb kv_up nope block into q:  q' = q_nope @ W_uk^T  -> latent space
+    wkv = params["wkv_up"]["w"].reshape(
+        m.kv_lora_rank, H, m.qk_nope_dim + m.v_dim)
+    w_uk = wkv[:, :, :m.qk_nope_dim]                    # (lora, H, nope)
+    w_uv = wkv[:, :, m.qk_nope_dim:]                    # (lora, H, v)
+    q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope, w_uk)  # (B,1,H,lora)
+
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    logits = (jnp.einsum("bqhl,bkl->bhqk", q_lat, ckv)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope)
+              ).astype(jnp.float32) * scale
+    Smax = ckv.shape[1]
+    visible = jnp.arange(Smax)[None, None, None, :] <= cache_index
+    logits = jnp.where(visible, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhqk,bkl->bqhl", probs, ckv)    # (B,1,H,lora)
+    out = jnp.einsum("bqhl,lhd->bqhd", o_lat, w_uv)     # absorb v-up
+    out = dense(params["wo"], out.reshape(B, S, H * m.v_dim))
+    return out, {"ckv": ckv, "k_rope": k_rope}

@@ -1,0 +1,86 @@
+"""Model registry: config -> model object + input specs per assigned shape.
+
+``build(cfg)`` returns an object exposing:
+    init(key) / param_specs()
+    loss(params, batch)                      (train shapes)
+    prefill(params, batch[, max_seq])        (prefill shapes)
+    decode_step(params, caches, token, i)    (decode shapes)
+    cache_specs(batch, max_seq)
+
+``input_specs(cfg, shape_name)`` returns ShapeDtypeStruct stand-ins for the
+step inputs — weak-type-correct, shardable, no device allocation (the
+pattern the multi-pod dry-run requires)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import SHAPES, ModelConfig
+from .encdec import EncDecLM
+from .hybrid import HybridLM
+from .lm import DecoderLM
+from .ssm_lm import MambaLM
+
+
+def build(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        return MambaLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def shape_kind(shape_name: str) -> str:
+    return SHAPES[shape_name][2]
+
+
+def shape_applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """DESIGN.md §4 applicability matrix."""
+    seq, batch, kind = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch: 500k context skipped"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStructs for the step inputs of (cfg, shape)."""
+    seq, batch, kind = SHAPES[shape_name]
+    i32 = jnp.int32
+    bf = jnp.bfloat16
+
+    def tok(s):
+        return jax.ShapeDtypeStruct((batch, s), i32)
+
+    if kind == "train":
+        if cfg.family == "audio":
+            return {"frames": jax.ShapeDtypeStruct(
+                        (batch, cfg.frontend_len, cfg.d_model), bf),
+                    "tokens": tok(seq), "labels": tok(seq)}
+        if cfg.family == "vlm":
+            text = seq - cfg.frontend_len
+            return {"prefix": jax.ShapeDtypeStruct(
+                        (batch, cfg.frontend_len, cfg.d_model), bf),
+                    "tokens": tok(text), "labels": tok(text)}
+        return {"tokens": tok(seq), "labels": tok(seq)}
+
+    if kind == "prefill":
+        if cfg.family == "audio":
+            return {"frames": jax.ShapeDtypeStruct(
+                        (batch, cfg.frontend_len, cfg.d_model), bf),
+                    "tokens": tok(seq)}
+        if cfg.family == "vlm":
+            return {"prefix": jax.ShapeDtypeStruct(
+                        (batch, cfg.frontend_len, cfg.d_model), bf),
+                    "tokens": tok(seq - cfg.frontend_len)}
+        return {"tokens": tok(seq)}
+
+    # decode: one new token against a seq-length cache
+    model = build(cfg)
+    caches = model.cache_specs(batch, seq)
+    return {"caches": caches,
+            "token": jax.ShapeDtypeStruct((batch, 1), i32),
+            "cache_index": jax.ShapeDtypeStruct((), i32)}

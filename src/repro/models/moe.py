@@ -1,0 +1,208 @@
+"""Mixture-of-Experts FFN — dropless sorted ragged_dot dispatch.
+
+Routing: softmax router, top-k experts per token, optional weight
+renormalization (DeepSeek-style) + optional shared (always-on) experts.
+
+Dispatch: token-expert pairs are sorted by expert id and the three expert
+matmuls run as ``jax.lax.ragged_dot`` grouped GEMMs (MXU-native, no (T,E,C)
+dispatch tensors — this is what scales to 256 experts).  Under GSPMD the
+expert (group) dimension is sharded over the EP axis; the sort/gather
+becomes an all-to-all.  See runtime/sharding.py for the EP rules and
+DESIGN.md §5.
+
+Aux losses: load-balance (Switch-style) recorded for the training loop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init
+from .config import MoEConfig
+
+
+def moe_init(key, d_model: int, mcfg: MoEConfig, dtype):
+    ks = jax.random.split(key, 5)
+    E, dff = mcfg.num_experts, mcfg.d_ff_expert
+    scale = d_model ** -0.5
+
+    def stack(k, d_in, d_out):
+        w = jax.random.normal(k, (E, d_in, d_out), jnp.float32) * scale
+        return w.astype(dtype)
+
+    p = {
+        "router": dense_init(ks[0], d_model, E, jnp.float32),
+        "w_gate": stack(ks[1], d_model, dff),
+        "w_up": stack(ks[2], d_model, dff),
+        "w_down": stack(ks[3], dff, d_model),
+    }
+    if mcfg.num_shared:
+        from .layers import swiglu_init
+        p["shared"] = swiglu_init(ks[4], d_model,
+                                  dff * mcfg.num_shared, dtype)
+    return p
+
+
+def _route(params, xf, mcfg: MoEConfig):
+    E, K = mcfg.num_experts, mcfg.top_k
+    logits = (xf.astype(jnp.float32) @ params["router"]["w"])    # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, K)                          # (T, K)
+    if mcfg.router_renorm:
+        topw = topw / jnp.maximum(jnp.sum(topw, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss
+    me = jnp.mean(probs, axis=0)                                  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(topi, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = {"lb_loss": E * jnp.sum(me * ce) / K}
+    return topw, topi, aux
+
+
+def moe_ffn(params, x, mcfg: MoEConfig):
+    """x: (..., d) -> (..., d), plus aux dict.  Dispatch per mcfg.impl."""
+    if mcfg.impl == "dispatch":
+        return moe_ffn_dispatch(params, x, mcfg)
+    if mcfg.impl == "gather":
+        return moe_ffn_gather(params, x, mcfg)
+    shape = x.shape
+    d = shape[-1]
+    xf = x.reshape(-1, d)
+    T = xf.shape[0]
+    E, K = mcfg.num_experts, mcfg.top_k
+    topw, topi, aux = _route(params, xf, mcfg)
+
+    flat_e = topi.reshape(-1)                                     # (T*K,)
+    order = jnp.argsort(flat_e)
+    token_of = order // K                                          # source token
+    xs = jnp.take(xf, token_of, axis=0)                           # (T*K, d)
+    group_sizes = jnp.bincount(flat_e, length=E).astype(jnp.int32)
+
+    g = jax.lax.ragged_dot(xs, params["w_gate"], group_sizes)
+    u = jax.lax.ragged_dot(xs, params["w_up"], group_sizes)
+    h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
+         ).astype(x.dtype)
+    y_sorted = jax.lax.ragged_dot(h, params["w_down"], group_sizes)
+
+    # unsort + combine with routing weights
+    w_sorted = jnp.take(topw.reshape(-1), order).astype(jnp.float32)
+    contrib = y_sorted.astype(jnp.float32) * w_sorted[:, None]
+    out = jnp.zeros((T, d), jnp.float32).at[token_of].add(contrib)
+
+    if mcfg.num_shared:
+        from .layers import swiglu
+        out = out + swiglu(params["shared"], xf).astype(jnp.float32)
+    return out.astype(x.dtype).reshape(shape), aux
+
+
+def moe_ffn_gather(params, x, mcfg: MoEConfig):
+    """Capacity-based GATHER dispatch (§Perf, llama4 iteration 2).
+
+    The dense one-hot dispatch einsum (``moe_ffn_dispatch``) is a
+    T x (E*C) x d matmul — with E*C ~= 1.25*T*K it costs MORE than the
+    expert FFN itself (refuted in EXPERIMENTS.md §Perf, llama4 iter 1).
+    Here dispatch is a zero-FLOP slot gather: ``slot_token[e, c]`` holds
+    the token occupying expert e's slot c (sentinel T = dropped/empty ->
+    gathers a zero row), the expert FFN runs as (E, C, d) batch matmuls
+    whose E dim aligns with the expert sharding, and tokens read their
+    results back with a (T, K) gather + weighted sum."""
+    shape = x.shape
+    d = shape[-1]
+    xf = x.reshape(-1, d)
+    T = xf.shape[0]
+    E, K = mcfg.num_experts, mcfg.top_k
+    C = max(1, int(np.ceil(T * K / E * mcfg.capacity_factor)))
+    topw, topi, aux = _route(params, xf, mcfg)
+
+    # slot assignment per (t, k): position within the routed expert
+    used = jnp.zeros((E,), jnp.int32)
+    slot_token = jnp.full((E * C,), T, jnp.int32)        # sentinel: zero row
+    pos_tk = jnp.zeros((T, K), jnp.int32)
+    keep_tk = jnp.zeros((T, K), bool)
+    for k in range(K):
+        oh = jax.nn.one_hot(topi[:, k], E, dtype=jnp.int32)       # (T, E)
+        pos = jnp.cumsum(oh, axis=0) - oh + used[None, :]
+        mypos = jnp.sum(pos * oh, axis=1)                         # (T,)
+        keep = mypos < C
+        flat = jnp.where(keep, topi[:, k] * C + mypos, E * C)
+        slot_token = slot_token.at[jnp.clip(flat, 0, E * C - 1)].set(
+            jnp.where(keep, jnp.arange(T, dtype=jnp.int32),
+                      slot_token[jnp.clip(flat, 0, E * C - 1)]))
+        pos_tk = pos_tk.at[:, k].set(mypos)
+        keep_tk = keep_tk.at[:, k].set(keep)
+        used = used + jnp.sum(oh * keep[:, None], axis=0)
+
+    from .layers import maybe_constrain
+    xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    x_e = jnp.take(xpad, slot_token, axis=0).reshape(E, C, d)
+    # pin the expert dim to the EP ('model') axis — without the constraint
+    # GSPMD replicated the expert batch-matmuls 16x (EXPERIMENTS.md §Perf,
+    # llama4 iteration 3)
+    x_e = maybe_constrain(x_e, "model", None, None)
+    g = jnp.einsum("ecd,edf->ecf", x_e, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", x_e, params["w_up"])
+    h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
+         ).astype(x.dtype)
+    h = maybe_constrain(h, "model", None, None)
+    y_e = jnp.einsum("ecf,efd->ecd", h, params["w_down"])         # (E,C,d)
+    y_e = maybe_constrain(y_e, "model", None, None)
+
+    # read-back: token t sums its kept slots, weighted by the router
+    flat_idx = jnp.clip(topi * C + pos_tk, 0, E * C - 1)          # (T, K)
+    y_tk = jnp.take(y_e.reshape(E * C, d), flat_idx, axis=0)      # (T,K,d)
+    w = (topw * keep_tk).astype(jnp.float32)
+    out = jnp.einsum("tkd,tk->td", y_tk.astype(jnp.float32), w)
+
+    if mcfg.num_shared:
+        from .layers import swiglu
+        out = out + swiglu(params["shared"], xf).astype(jnp.float32)
+    return out.astype(x.dtype).reshape(shape), aux
+
+
+def moe_ffn_dispatch(params, x, mcfg: MoEConfig):
+    """Capacity-based dense-dispatch MoE (§Perf, EXPERIMENTS.md llama4).
+
+    Builds (T, E, C) dispatch/combine tensors whose E dim aligns with the
+    expert-sharded weight stacks, so under GSPMD each EP shard contracts
+    the full (replicated-over-model) token block against its local experts
+    — no expert-weight all-gathers, no layout ping-pong; the only
+    model-axis collective is the final combine all-reduce of (T, d)
+    activations.  Tokens beyond ``capacity_factor * T * K / E`` per expert
+    are dropped (standard production behaviour; the dropless ragged path
+    remains the numerical default)."""
+    shape = x.shape
+    d = shape[-1]
+    xf = x.reshape(-1, d)
+    T = xf.shape[0]
+    E, K = mcfg.num_experts, mcfg.top_k
+    C = max(1, int(np.ceil(T * K / E * mcfg.capacity_factor)))
+    topw, topi, aux = _route(params, xf, mcfg)
+
+    disp = jnp.zeros((T, E, C), xf.dtype)
+    comb = jnp.zeros((T, E, C), jnp.float32)
+    # fill slots per routing rank k (K small: python loop, no (T,K,E,C))
+    used = jnp.zeros((E,), jnp.int32)          # slots consumed per expert
+    for k in range(K):
+        oh = jax.nn.one_hot(topi[:, k], E, dtype=jnp.int32)       # (T, E)
+        pos = jnp.cumsum(oh, axis=0) - oh + used[None, :]         # (T, E)
+        keep = (pos < C) & (oh > 0)
+        slot = jax.nn.one_hot(jnp.where(keep, pos, C), C,
+                              dtype=xf.dtype)                     # (T,E,C)
+        slot = slot * keep[..., None]
+        disp = disp + slot
+        comb = comb + slot.astype(jnp.float32) \
+            * topw[:, k][:, None, None]
+        used = used + jnp.sum(oh * keep, axis=0)
+
+    x_e = jnp.einsum("tec,td->ecd", disp, xf)                     # (E,C,d)
+    g = jnp.einsum("ecd,edf->ecf", x_e, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", x_e, params["w_up"])
+    h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
+         ).astype(x.dtype)
+    y_e = jnp.einsum("ecf,efd->ecd", h, params["w_down"])         # (E,C,d)
+    out = jnp.einsum("ecd,tec->td", y_e.astype(jnp.float32), comb)
+
+    if mcfg.num_shared:
+        from .layers import swiglu
+        out = out + swiglu(params["shared"], xf).astype(jnp.float32)
+    return out.astype(x.dtype).reshape(shape), aux

@@ -1,0 +1,239 @@
+"""Mamba2 block (state-space duality) — pure-jnp chunked SSD + decode step.
+
+The training/prefill path uses the chunked SSD formulation (quadratic within
+a chunk — MXU matmuls — linear across chunks); it is mathematically the same
+computation as ``repro.kernels.ssd_scan`` (the Pallas TPU kernel) and is the
+path the dry-run lowers so XLA cost analysis stays truthful (DESIGN.md §6).
+Decode is the O(1) recurrence over (H, P, S) state + a (conv_width-1) FIFO.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, SSMConfig
+from .layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+
+# ------------------------------------------------------------ chunked SSD
+
+def ssd_jnp(x, dt, A, Bm, Cm, D, chunk: int):
+    """Batched SSD.  x (B,L,H,P), dt (B,L,H), A (H,), Bm/Cm (B,L,G,S), D (H,).
+
+    Returns (y (B,L,H,P), final_state (B,H,P,S)).
+    """
+    Bt, L, H, P = x.shape
+    G, S = Bm.shape[2], Bm.shape[3]
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L + pad
+    nc = Lp // chunk
+    T = chunk
+    rep = H // G
+
+    xc = x.reshape(Bt, nc, T, H, P)
+    dtc = dt.reshape(Bt, nc, T, H)
+    Bc = Bm.reshape(Bt, nc, T, G, S)
+    Cc = Cm.reshape(Bt, nc, T, G, S)
+
+    a = dtc * A[None, None, None, :]                    # (B,nc,T,H) log-decay
+    cum = jnp.cumsum(a, axis=2)                         # inclusive
+
+    # ---- intra-chunk (quadratic, attention-like) --------------------------
+    hg = jnp.arange(H) % G                              # head -> group (ref.py)
+    cb = jnp.einsum("bntgs,bnugs->bngtu", Cc, Bc)       # (B,nc,G,T,T)
+    cb = jnp.take(cb, hg, axis=2)                       # (B,nc,H,T,T)
+    cumh = cum.transpose(0, 1, 3, 2)                    # (B,nc,H,T)
+    # gate[b,n,h,t,u] = exp(cum[t] - cum[u]), masked to u <= t.  The mask
+    # must be applied INSIDE the exp: for u > t the difference is large and
+    # positive, exp overflows, and where() would leak NaN into the backward
+    # pass (0 * inf).
+    tril = jnp.tril(jnp.ones((T, T), bool))
+    diff = cumh[..., :, None] - cumh[..., None, :]
+    gate = jnp.exp(jnp.where(tril[None, None, None], diff, -1e30))
+    dx = dtc[..., None] * xc                            # (B,nc,T,H,P)
+    y_intra = jnp.einsum("bnhtu,bnuhp->bnthp", cb * gate, dx)
+
+    # ---- chunk states ------------------------------------------------------
+    w = dtc * jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,T,H)
+    Bh = jnp.take(Bc, hg, axis=3)                       # (B,nc,T,H,S)
+    chunk_state = jnp.einsum("bnth,bnthp,bnths->bnhps", w, xc, Bh)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # (B,nc,H)
+
+    # ---- inter-chunk scan --------------------------------------------------
+    def step(carry, inp):
+        st = carry                                      # (B,H,P,S)
+        decay, cs = inp
+        new = decay[:, :, None, None] * st + cs
+        return new, st                                  # emit state *before*
+
+    init = jnp.zeros((Bt, H, P, S), x.dtype)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (chunk_decay.swapaxes(0, 1), chunk_state.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)            # (B,nc,H,P,S)
+
+    Ch = jnp.take(Cc, hg, axis=3)                       # (B,nc,T,H,S)
+    y_inter = jnp.einsum("bnth,bnths,bnhps->bnthp",
+                         jnp.exp(cum), Ch, prev_states)
+
+    y = y_intra + y_inter + D[None, None, None, :, None] * xc
+    y = y.reshape(Bt, Lp, H, P)[:, :L]
+    return y, final
+
+
+# -------------------------------------------------------------- full block
+
+def mamba2_init(key, cfg: ModelConfig, dtype):
+    """Separate z/x/B/C/dt projections + per-component causal convs.
+
+    The reference implementation fuses these into one in_proj and one
+    conv over concat(x, B, C); we keep them separate so each output dim
+    shards cleanly over the TP axis (DESIGN.md §5 — the fused layout has
+    a 2*inner+2*G*S+H output dim that is generally not divisible by the
+    mesh and whose split points fall inside shards).  FLOPs/params are
+    identical.
+    """
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    inner = s.expand * d
+    H = inner // s.head_dim
+    G = s.ngroups
+    gs = G * s.state_dim
+    ks = jax.random.split(key, 7)
+
+    def conv(k, dim):
+        w = jax.random.normal(k, (s.conv_width, dim), jnp.float32)
+        return (w * (s.conv_width ** -0.5)).astype(dtype)
+
+    return {
+        "z_proj": dense_init(ks[0], d, inner, dtype),
+        "x_proj": dense_init(ks[1], d, inner, dtype),
+        "b_proj": dense_init(ks[2], d, gs, dtype),
+        "c_proj": dense_init(ks[3], d, gs, dtype),
+        "dt_proj": dense_init(ks[4], d, H, dtype),
+        "conv_x_w": conv(ks[5], inner),
+        "conv_x_b": jnp.zeros((inner,), dtype),
+        "conv_b_w": conv(ks[6], gs),
+        "conv_b_b": jnp.zeros((gs,), dtype),
+        "conv_c_w": conv(jax.random.fold_in(ks[6], 1), gs),
+        "conv_c_b": jnp.zeros((gs,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "gate_norm": rmsnorm_init(inner, dtype),
+        "out_proj": dense_init(jax.random.fold_in(ks[5], 7), inner, d, dtype),
+    }
+
+
+def _causal_conv(xs, w, b):
+    """Depthwise causal conv, width K: y_t = sum_k w_k x_{t-K+1+k}."""
+    K = w.shape[0]
+    pads = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(pads[:, k:k + xs.shape[1], :] * w[k][None, None, :]
+            for k in range(K))
+    return jax.nn.silu((y + b[None, None, :]).astype(jnp.float32)).astype(
+        xs.dtype)
+
+
+def mamba2_block(params, cfg: ModelConfig, x):
+    """Full-sequence forward.  x (B,L,d) -> (y (B,L,d), cache)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    inner = s.expand * d
+    H = inner // s.head_dim
+    G, S = s.ngroups, s.state_dim
+    B_, L, _ = x.shape
+    K = s.conv_width
+
+    z = dense(params["z_proj"], x)
+    x_raw = dense(params["x_proj"], x)
+    b_raw = dense(params["b_proj"], x)
+    c_raw = dense(params["c_proj"], x)
+    dt = dense(params["dt_proj"], x)
+
+    xc = _causal_conv(x_raw, params["conv_x_w"], params["conv_x_b"])
+    bc = _causal_conv(b_raw, params["conv_b_w"], params["conv_b_b"])
+    cc = _causal_conv(c_raw, params["conv_c_w"], params["conv_c_b"])
+    xin = xc.reshape(B_, L, H, s.head_dim)
+    Bm = bc.reshape(B_, L, G, S)
+    Cm = cc.reshape(B_, L, G, S)
+
+    dtp = jax.nn.softplus(dt.astype(jnp.float32)
+                          + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+    y, final_state = ssd_jnp(xin.astype(jnp.float32), dtp, A,
+                             Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                             params["D"], s.chunk)
+    y = y.reshape(B_, L, inner).astype(x.dtype)
+    y = rmsnorm(params["gate_norm"],
+                y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    out = dense(params["out_proj"], y)
+
+    def fifo(raw):
+        pad = jnp.pad(raw, ((0, 0), (max(0, K - 1 - L), 0), (0, 0)))
+        return pad[:, -(K - 1):, :]
+
+    cache = {"ssm": final_state.astype(jnp.float32),
+             "cx": fifo(x_raw), "cb": fifo(b_raw), "cc": fifo(c_raw)}
+    return out, cache
+
+
+def _conv_step(fifo, new, w, b):
+    """One causal-conv step over FIFO+current; returns (y, new_fifo)."""
+    window = jnp.concatenate([fifo, new], axis=1)          # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    y = jax.nn.silu(y + b.astype(jnp.float32))[:, None, :]
+    return y.astype(new.dtype), window[:, 1:, :]
+
+
+def mamba2_decode(params, cfg: ModelConfig, x, cache):
+    """Single-token step.  x (B,1,d);
+    cache {ssm (B,H,P,S), cx (B,K-1,inner), cb/cc (B,K-1,G*S)}."""
+    s = cfg.ssm
+    d = cfg.d_model
+    inner = s.expand * d
+    H = inner // s.head_dim
+    G, S = s.ngroups, s.state_dim
+    B_, _, _ = x.shape
+
+    z = dense(params["z_proj"], x)
+    x_raw = dense(params["x_proj"], x)
+    b_raw = dense(params["b_proj"], x)
+    c_raw = dense(params["c_proj"], x)
+    dt = dense(params["dt_proj"], x)
+
+    xc, new_cx = _conv_step(cache["cx"], x_raw, params["conv_x_w"],
+                            params["conv_x_b"])
+    bc, new_cb = _conv_step(cache["cb"], b_raw, params["conv_b_w"],
+                            params["conv_b_b"])
+    cc_, new_cc = _conv_step(cache["cc"], c_raw, params["conv_c_w"],
+                             params["conv_c_b"])
+
+    xin = xc[:, 0].reshape(B_, H, s.head_dim)
+    Bm = bc[:, 0].reshape(B_, G, S)
+    Cm = cc_[:, 0].reshape(B_, G, S)
+    hg = jnp.arange(H) % G
+    Bh = jnp.take(Bm, hg, axis=1)                       # (B,H,S)
+    Ch = jnp.take(Cm, hg, axis=1)
+
+    dtp = jax.nn.softplus(dt.astype(jnp.float32)[:, 0]
+                          + params["dt_bias"][None, :])   # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dtp * A[None, :])                     # (B,H)
+    st = cache["ssm"]
+    st = (decay[:, :, None, None] * st
+          + dtp[:, :, None, None] * xin.astype(jnp.float32)[:, :, :, None]
+          * Bh.astype(jnp.float32)[:, :, None, :])
+    y = jnp.einsum("bhps,bhs->bhp", st, Ch.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(B_, 1, inner).astype(x.dtype)
+    y = rmsnorm(params["gate_norm"],
+                y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    out = dense(params["out_proj"], y)
+    return out, {"ssm": st, "cx": new_cx, "cb": new_cb, "cc": new_cc}

@@ -1,0 +1,121 @@
+"""Pure-SSM decoder LM (mamba2-130m): embed -> N x (norm + mamba2) -> head.
+
+Attention-free: decode state is O(1) in sequence length, which is what
+qualifies this family (and the zamba2 hybrid) for the long_500k shape
+(DESIGN.md §4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (blocked_xent, dtype_of, embed, embed_init, rmsnorm,
+                     rmsnorm_init, softmax_xent, unembed)
+from .ssd import mamba2_block, mamba2_decode, mamba2_init
+
+
+def _block_init(key, cfg, dtype):
+    return {"norm": rmsnorm_init(cfg.d_model, dtype),
+            "mixer": mamba2_init(key, cfg, dtype)}
+
+
+def _block_apply(p, cfg, x):
+    y, cache = mamba2_block(p["mixer"], cfg, rmsnorm(p["norm"], x))
+    return x + y, cache
+
+
+def _block_decode(p, cfg, x, cache):
+    y, new = mamba2_decode(p["mixer"], cfg, rmsnorm(p["norm"], x), cache)
+    return x + y, new
+
+
+class MambaLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = dtype_of(cfg.dtype)
+
+    def init(self, key):
+        cfg = self.cfg
+        k0, k1, k2 = jax.random.split(key, 3)
+        keys = jax.random.split(k1, cfg.num_layers)
+        layers = [_block_init(k, cfg, self.dtype) for k in keys]
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+        params = {"embed": embed_init(k0, cfg.vocab_size, cfg.d_model,
+                                      self.dtype),
+                  "layers": stacked,
+                  "final_norm": rmsnorm_init(cfg.d_model, self.dtype)}
+        if not cfg.tie_embeddings:
+            out = jax.random.normal(k2, (cfg.d_model, cfg.vocab_size),
+                                    jnp.float32) * cfg.d_model ** -0.5
+            params["out"] = {"table": out.T.astype(self.dtype)}
+        return params
+
+    def param_specs(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    def _logits(self, params, x):
+        head = params["embed"] if self.cfg.tie_embeddings or \
+            "out" not in params else params["out"]
+        return unembed(head, x)
+
+    def _backbone(self, params, x):
+        def body(h, layer_p):
+            h, cache = _block_apply(layer_p, self.cfg, h)
+            return h, cache
+
+        fn = jax.checkpoint(body) if self.cfg.remat != "none" else body
+        x, caches = jax.lax.scan(fn, x, params["layers"],
+                                 unroll=self.cfg.scan_unroll)
+        return rmsnorm(params["final_norm"], x), caches
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"])
+        x, _ = self._backbone(params, x)
+        if cfg.xent_block:
+            head = params["embed"] if cfg.tie_embeddings or \
+                "out" not in params else params["out"]
+            return blocked_xent(x[:, :-1], head["table"],
+                                batch["labels"][:, 1:], cfg.xent_block)
+        logits = self._logits(params, x)
+        return softmax_xent(logits[:, :-1], batch["labels"][:, 1:])
+
+    # ------------------------------------------------------------- serving
+    def cache_specs(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        s = cfg.ssm
+        inner = s.expand * cfg.d_model
+        H = inner // s.head_dim
+        gs = s.ngroups * s.state_dim
+        L = cfg.num_layers
+        K = s.conv_width
+        return {
+            "ssm": jax.ShapeDtypeStruct(
+                (L, batch, H, s.head_dim, s.state_dim), jnp.float32),
+            "cx": jax.ShapeDtypeStruct((L, batch, K - 1, inner), self.dtype),
+            "cb": jax.ShapeDtypeStruct((L, batch, K - 1, gs), self.dtype),
+            "cc": jax.ShapeDtypeStruct((L, batch, K - 1, gs), self.dtype),
+        }
+
+    def init_cache(self, batch: int, max_seq: int = 0):
+        return jax.tree_util.tree_map(
+            lambda sp: jnp.zeros(sp.shape, sp.dtype),
+            self.cache_specs(batch, max_seq))
+
+    def prefill(self, params, batch, max_seq=None):
+        x = embed(params["embed"], batch["tokens"])
+        x, caches = self._backbone(params, x)
+        return self._logits(params, x[:, -1:]), caches
+
+    def decode_step(self, params, caches, token, cache_index):
+        x = embed(params["embed"], token)
+
+        def body(h, xs):
+            layer_p, cache = xs
+            h, new = _block_decode(layer_p, self.cfg, h, cache)
+            return h, new
+
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches),
+                                     unroll=self.cfg.scan_unroll)
+        x = rmsnorm(params["final_norm"], x)
+        return self._logits(params, x), new_caches

@@ -1,0 +1,8 @@
+from .adamw import AdamWConfig, init as adamw_init, update as adamw_update
+from .schedule import warmup_cosine, wsd
+from .grad import (accumulate, clip_by_global_norm, compress, decompress,
+                   global_norm, zero_residual)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "warmup_cosine",
+           "wsd", "accumulate", "clip_by_global_norm", "compress",
+           "decompress", "global_norm", "zero_residual"]

@@ -1,0 +1,75 @@
+"""AdamW in pure JAX with large-scale state-dtype options.
+
+``state_dtype='float32'`` is the standard choice; ``'bfloat16'`` halves the
+optimizer-state HBM footprint (the binding memory term for the 671B-scale
+dry-run configs, see EXPERIMENTS.md §Dry-run) using stochastic rounding on
+the first moment to avoid update bias."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"      # 'float32' | 'bfloat16'
+
+
+def _to_state_dtype(x, dtype, key=None):
+    if dtype == jnp.bfloat16 and key is not None:
+        # stochastic rounding: add uniform noise below the bf16 mantissa step
+        scale = jnp.abs(x) * 2 ** -8
+        noise = jax.random.uniform(key, x.shape, jnp.float32, -0.5, 0.5)
+        return (x + noise * scale).astype(jnp.bfloat16)
+    return x.astype(dtype)
+
+
+def init(params, cfg: AdamWConfig):
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+
+    def zeros(p):
+        return {"m": jnp.zeros(p.shape, dt), "v": jnp.zeros(p.shape, dt)}
+
+    return {"mu": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def update(grads, state, params, cfg: AdamWConfig, lr_scale=1.0,
+           rng: Optional[jax.Array] = None):
+    """Returns (new_params, new_state).  Math in fp32 regardless of the
+    param/state dtype; params are updated in their own dtype."""
+    count = state["count"] + 1
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    use_sr = cfg.state_dtype == "bfloat16" and rng is not None
+
+    def one(g, mu, p, key):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * mu["m"].astype(jnp.float32) + (1 - cfg.b1) * g
+        v = cfg.b2 * mu["v"].astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - cfg.lr * lr_scale * step
+        return (new_p.astype(p.dtype),
+                {"m": _to_state_dtype(m, dt, key), "v": v.astype(dt)})
+
+    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+    mu_leaves = treedef.flatten_up_to(state["mu"])
+    p_leaves = treedef.flatten_up_to(params)
+    out = [one(g, mu, p,
+               jax.random.fold_in(rng, i) if use_sr else None)
+           for i, (g, mu, p) in enumerate(zip(g_leaves, mu_leaves, p_leaves))]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return new_params, {"mu": new_mu, "count": count}

@@ -1,0 +1,73 @@
+"""Gradient utilities: global-norm clipping, accumulation, and int8
+error-feedback compression for the cross-pod all-reduce (DESIGN.md §5).
+
+Compression model: the slow link at multi-pod scale is the inter-pod DCN/ICI
+hop of the data-parallel gradient all-reduce.  We quantize each leaf to int8
+with a per-leaf scale before the ``pod``-axis reduction and keep the
+quantization residual locally (error feedback), which preserves convergence
+(Karimireddy et al. 2019).  The 'pod' all-reduce then moves 1/4 of the bf16
+bytes.  ``compress/decompress`` are exposed separately so the launcher can
+wrap only the pod-axis psum."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-6))
+    return jax.tree_util.tree_map(
+        lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), tree), norm
+
+
+def accumulate(loss_fn, params, batches):
+    """Gradient accumulation over the leading microbatch axis via scan."""
+    def body(acc, micro):
+        loss, g = jax.value_and_grad(loss_fn)(params, micro)
+        acc = jax.tree_util.tree_map(
+            lambda a, b: a + b.astype(jnp.float32), acc, g)
+        return acc, loss
+
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    grads, losses = jax.lax.scan(body, zeros, batches)
+    n = losses.shape[0]
+    return (jax.tree_util.tree_map(lambda g: g / n, grads),
+            jnp.mean(losses))
+
+
+# --------------------------------------------------- int8 error feedback
+
+def compress(tree, residual):
+    """tree + residual -> (int8 tree, scales, new residual)."""
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        new_r = g - q.astype(jnp.float32) * scale
+        return q, scale, new_r
+
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    r_flat = treedef.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat, r_flat)]
+    q = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    scales = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_r = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return q, scales, new_r
+
+
+def decompress(q, scales):
+    return jax.tree_util.tree_map(
+        lambda qq, s: qq.astype(jnp.float32) * s, q, scales)
+
+
+def zero_residual(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,22 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int, total: int, min_ratio: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return warm * (min_ratio + (1 - min_ratio) * cos)
+
+
+def wsd(step, *, warmup: int, total: int, decay_frac: float = 0.1):
+    """Warmup-stable-decay (linear cooldown tail)."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    decay_start = total * (1 - decay_frac)
+    cool = jnp.clip((total - step) / jnp.maximum(total - decay_start, 1),
+                    0, 1)
+    return warm * cool

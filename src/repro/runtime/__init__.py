@@ -1,0 +1,8 @@
+from .sharding import (param_pspecs, opt_state_pspecs, input_pspecs,
+                       to_shardings, fsdp_axes, dp_axes)
+from .fault import (FleetMonitor, FaultConfig, plan_elastic_mesh,
+                    resume_plan)
+
+__all__ = ["param_pspecs", "opt_state_pspecs", "input_pspecs",
+           "to_shardings", "fsdp_axes", "dp_axes", "FleetMonitor",
+           "FaultConfig", "plan_elastic_mesh", "resume_plan"]

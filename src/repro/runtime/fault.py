@@ -1,0 +1,117 @@
+"""Fault tolerance & elasticity: the control-plane state machine.
+
+On real multi-host TPU fleets, failure detection is heartbeat-driven and
+the recovery path is: quiesce -> choose largest healthy mesh -> restore the
+latest checkpoint with the new sharding -> resume (the data pipeline is a
+pure function of the step counter, so no data is lost or repeated).  This
+module implements that state machine host-side so it is unit-testable in
+this single-process container; the mesh-building and resharding pieces it
+drives (launch/mesh.py, checkpoint/) are the real ones.
+
+Straggler mitigation: per-step host heartbeats; hosts whose step latency
+exceeds ``straggler_factor`` x the fleet median for ``patience``
+consecutive steps are reported for eviction (the same quiesce/re-mesh path
+as a failure, minus the lost shard)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class HostState:
+    host_id: int
+    last_heartbeat: float
+    last_step: int
+    step_latency: float = 0.0
+    healthy: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    heartbeat_timeout: float = 60.0
+    straggler_factor: float = 2.0
+    straggler_patience: int = 3
+
+
+class FleetMonitor:
+    """Tracks host heartbeats; decides failure/straggler evictions and the
+    replacement mesh shape."""
+
+    def __init__(self, num_hosts: int, cfg: FaultConfig = FaultConfig(),
+                 clock=time.monotonic):
+        self.cfg = cfg
+        self.clock = clock
+        self.hosts: Dict[int, HostState] = {
+            h: HostState(h, clock(), -1) for h in range(num_hosts)}
+        self._strag_count: Dict[int, int] = {h: 0 for h in range(num_hosts)}
+
+    def heartbeat(self, host_id: int, step: int, step_latency: float):
+        hs = self.hosts[host_id]
+        hs.last_heartbeat = self.clock()
+        hs.last_step = step
+        hs.step_latency = step_latency
+
+    def failed_hosts(self) -> List[int]:
+        now = self.clock()
+        return [h for h, hs in self.hosts.items()
+                if hs.healthy and now - hs.last_heartbeat
+                > self.cfg.heartbeat_timeout]
+
+    def stragglers(self) -> List[int]:
+        healthy = [hs for hs in self.hosts.values() if hs.healthy]
+        lats = sorted(hs.step_latency for hs in healthy if hs.step_latency)
+        if len(lats) < 2:
+            return []
+        median = lats[len(lats) // 2]
+        out = []
+        for hs in healthy:
+            if hs.step_latency > self.cfg.straggler_factor * median:
+                self._strag_count[hs.host_id] += 1
+                if self._strag_count[hs.host_id] >= \
+                        self.cfg.straggler_patience:
+                    out.append(hs.host_id)
+            else:
+                self._strag_count[hs.host_id] = 0
+        return out
+
+    def evict(self, host_ids: List[int]):
+        for h in host_ids:
+            self.hosts[h].healthy = False
+            self._strag_count[h] = 0
+
+    def healthy_count(self) -> int:
+        return sum(hs.healthy for hs in self.hosts.values())
+
+
+def plan_elastic_mesh(healthy_chips: int,
+                      model_axis: int) -> Optional[Tuple[int, ...]]:
+    """Largest (data, model) mesh that fits the healthy chips, keeping the
+    model axis intact (TP degree is fixed by the memory plan) and the data
+    axis a power of two (keeps global batch divisible)."""
+    if healthy_chips < model_axis:
+        return None
+    data = healthy_chips // model_axis
+    p = 1
+    while p * 2 <= data:
+        p *= 2
+    return (p, model_axis)
+
+
+def resume_plan(monitor: FleetMonitor, chips_per_host: int,
+                model_axis: int) -> dict:
+    """The full recovery decision: who to evict, what mesh to rebuild,
+    whether training can continue."""
+    failed = monitor.failed_hosts()
+    strag = monitor.stragglers()
+    monitor.evict(failed + strag)
+    chips = monitor.healthy_count() * chips_per_host
+    mesh = plan_elastic_mesh(chips, model_axis)
+    return {
+        "evicted_failed": failed,
+        "evicted_stragglers": strag,
+        "healthy_chips": chips,
+        "mesh": mesh,
+        "action": "continue" if mesh else "halt",
+    }

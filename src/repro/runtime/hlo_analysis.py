@@ -1,0 +1,137 @@
+"""HLO-text analysis: collective census + roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs/bytes but (a) does not multiply
+while-loop trip counts (XLA:CPU, verified by calibration in
+launch/dryrun.py) and (b) has no collective-bytes entry.  This module:
+
+  * parses the compiled SPMD module text and sums, per collective kind,
+    the *operand* bytes of every all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute (per-device shard sizes — the SPMD
+    module is the per-device program);
+  * converts to roofline terms with the v5e constants.
+
+Roofline model (per device, per step):
+  compute    = flops / PEAK_FLOPS
+  memory     = bytes_accessed / HBM_BW
+  collective = sum_k operand_bytes_k * ring_factor_k / ICI_BW
+where ring_factor models bytes-through-a-link per ring collective:
+all-gather & reduce-scatter & all-to-all ~ (n-1)/n ~= 1, all-reduce ~ 2,
+collective-permute = 1.  (n is unknowable cheaply per-op from text; the
+(n-1)/n ~= 1 approximation is conservative within 7% for n >= 16.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+import numpy as np
+
+# TPU v5e constants (per chip) — the assignment's hardware model.
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DEF_RE = re.compile(r"^\s*(%[\w.\-]+|[\w.\-]+) = (.+?) ([\w\-]+)\((.*)\)",
+                     re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_RING_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    operand_bytes: Dict[str, float]
+    result_bytes: Dict[str, float]
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return float(sum(self.operand_bytes.values()))
+
+    def link_bytes(self) -> float:
+        """Ring-model bytes through a device's link."""
+        return float(sum(self.operand_bytes[k] * _RING_FACTOR[k]
+                         for k in self.operand_bytes))
+
+    def as_dict(self) -> dict:
+        return {"counts": dict(self.counts),
+                "operand_bytes": dict(self.operand_bytes),
+                "result_bytes": dict(self.result_bytes),
+                "link_bytes": self.link_bytes()}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Census of collective ops with operand/result byte sums.
+
+    Operand sizes come from a def-table of every named instruction; ops
+    inside while bodies appear once (caller multiplies by trip counts via
+    the probe-extrapolation, launch/dryrun.py)."""
+    defs: Dict[str, int] = {}
+    counts = {k: 0 for k in _COLLECTIVES}
+    op_bytes = {k: 0.0 for k in _COLLECTIVES}
+    res_bytes = {k: 0.0 for k in _COLLECTIVES}
+
+    for m in _DEF_RE.finditer(hlo_text):
+        name, type_str, op, args = m.groups()
+        defs[name.lstrip("%")] = _type_bytes(type_str)
+        kind = None
+        base = op.rstrip("-start").rstrip("-done")
+        for k in _COLLECTIVES:
+            if op == k or op == k + "-start":
+                kind = k
+                break
+        if kind is None:
+            continue
+        counts[kind] += 1
+        res_bytes[kind] += _type_bytes(type_str)
+        # operand bytes: resolve argument names against the def table
+        total = 0
+        for arg in args.split(","):
+            arg = arg.strip().split(" ")[-1].lstrip("%")
+            if arg in defs:
+                total += defs[arg]
+        if total == 0:
+            # operands not yet defined inline (e.g. parameters) — fall back
+            # to result size (exact for all-reduce/permute)
+            total = _type_bytes(type_str)
+        op_bytes[kind] += total
+    return CollectiveStats(counts=counts, operand_bytes=op_bytes,
+                           result_bytes=res_bytes)
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   link_bytes: float) -> dict:
+    """Per-device roofline terms in seconds + the dominant bottleneck."""
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_coll = link_bytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms["bottleneck"] = dom.replace("_s", "")
+    terms["step_lower_bound_s"] = bound
+    terms["roofline_fraction"] = (t_compute / bound) if bound > 0 else 0.0
+    return terms

@@ -1,0 +1,97 @@
+"""Filter soundness tests — including the paper's Lemma 6 counterexample."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from scipy.optimize import linear_sum_assignment
+
+from repro.core.filters import compute_iub, kth_largest
+
+
+def _oracle(w):
+    ri, ci = linear_sum_assignment(-w)
+    return float(w[ri, ci].sum())
+
+
+def test_kth_largest():
+    x = jnp.asarray([3.0, 1.0, 5.0, 2.0])
+    assert float(kth_largest(x, 1)) == 5.0
+    assert float(kth_largest(x, 3)) == 2.0
+    assert float(kth_largest(x, 10)) == 1.0  # clamps to len
+
+
+def test_paper_iub_counterexample():
+    """The paper's Lemma 6 bound undershoots SO (DESIGN.md §7.5):
+    greedy-blocked elements can be re-matched by the optimal matching at
+    similarities above s_now."""
+    w = np.zeros((3, 3), np.float32)
+    w[0, 0] = 1.0
+    w[0, 1] = 0.99
+    w[1, 0] = 0.99
+    w[2, 2] = 0.9
+    so = _oracle(w)                      # 2.88
+    # stream (desc): (q0,c0,1.0) admitted; 0.99s blocked; (q2,c2,.9) admitted
+    S, l, s_now = 1.9, 2, 0.9
+    iub_paper = S + min(3 - l, 3 - l) * s_now
+    assert iub_paper < so - 1e-6, "expected the unsound bound to undershoot"
+    # the corrected per-query-element bound stays valid
+    T, d, cap = 1.0 + 0.99 + 0.9, 3, 3
+    iub_sound = T + max(0, cap - d) * s_now
+    assert iub_sound >= so - 1e-6
+
+
+def _simulate_stream_bounds(w, alpha):
+    """Replay the refinement admission on a dense matrix; yield the sound
+    bound after every event and return final (T, d, S)."""
+    nq, nc = w.shape
+    pairs = [(w[i, j], i, j) for i in range(nq) for j in range(nc)
+             if w[i, j] >= alpha]
+    pairs.sort(key=lambda p: -p[0])
+    qmatched = np.zeros(nq, bool)
+    cmatched = np.zeros(nc, bool)
+    qseen = np.zeros(nq, bool)
+    S = T = 0.0
+    d = l = 0
+    cap = min(nq, nc)
+    bounds = []
+    for s, i, j in pairs:
+        if not qseen[i]:
+            qseen[i] = True
+            T += s
+            d += 1
+        if not qmatched[i] and not cmatched[j]:
+            qmatched[i] = cmatched[j] = True
+            S += s
+            l += 1
+        bounds.append(T + max(0, cap - d) * s)
+    bounds.append(T)      # stream exhausted: s_now term drops (sub-alpha = 0)
+    return bounds, S
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 100_000), st.integers(1, 8), st.integers(1, 8),
+       st.sampled_from([0.5, 0.7, 0.8]))
+def test_sound_iub_never_undershoots(seed, nq, nc, alpha):
+    """Property: iUB'(C) >= SO at every stream position (DESIGN.md §7.5),
+    and the greedy partial score S <= SO (Lemma 5)."""
+    rng = np.random.default_rng(seed)
+    w = rng.random((nq, nc)).astype(np.float32)
+    w = np.where(w >= alpha, w, 0.0)
+    so = _oracle(w)
+    bounds, S = _simulate_stream_bounds(w, alpha)
+    assert S <= so + 1e-5
+    for b in bounds:
+        assert b >= so - 1e-5
+
+
+def test_compute_iub_modes():
+    S = jnp.asarray([1.0, 2.0])
+    l = jnp.asarray([1, 2], jnp.int32)
+    T = jnp.asarray([1.5, 2.5])
+    d = jnp.asarray([2, 3], jnp.int32)
+    cap = jnp.asarray([4, 4], jnp.int32)
+    seen = jnp.asarray([True, False])
+    paper = compute_iub(S, l, T, d, cap, 0.9, seen, "paper")
+    sound = compute_iub(S, l, T, d, cap, 0.9, seen, "sound")
+    assert abs(float(paper[0]) - (1.0 + 3 * 0.9)) < 1e-6
+    assert abs(float(sound[0]) - (1.5 + 2 * 0.9)) < 1e-6
+    assert float(paper[1]) > 1e30 and float(sound[1]) > 1e30  # unseen

@@ -1,0 +1,163 @@
+"""Per-kernel allclose vs the ref.py oracles (interpret mode on CPU),
+with shape/dtype sweeps + hypothesis randomization."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (auction_topk2, auction_topk2_ref, cosine_topk,
+                           cosine_topk_ref, ssd, ssd_ref)
+
+
+def _unit(rng, n, d, dtype=np.float32):
+    x = rng.normal(size=(n, d)).astype(dtype)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+# ------------------------------------------------------------- cosine_topk
+@pytest.mark.parametrize("nq,nv,d,k,bv", [
+    (4, 64, 16, 4, 16),
+    (8, 100, 32, 8, 32),      # nv not a multiple of bv (padding path)
+    (3, 257, 8, 16, 64),
+    (16, 512, 128, 32, 128),
+])
+def test_cosine_topk_shapes(nq, nv, d, k, bv):
+    rng = np.random.default_rng(0)
+    qe, ev = _unit(rng, nq, d), _unit(rng, nv, d)
+    vals, idx = cosine_topk(qe, ev, k=k, bv=bv)
+    rvals, ridx = cosine_topk_ref(jnp.asarray(qe), jnp.asarray(ev), k)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals),
+                               atol=1e-5, rtol=1e-5)
+    # indices must agree where the scores are strictly separated
+    sep = np.asarray(rvals)[:, :-1] - np.asarray(rvals)[:, 1:] > 1e-5
+    same = np.asarray(idx)[:, :-1] == np.asarray(ridx)[:, :-1]
+    assert np.all(same | ~sep)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_cosine_topk_dtypes(dtype):
+    rng = np.random.default_rng(1)
+    qe, ev = _unit(rng, 4, 16, dtype), _unit(rng, 64, 16, dtype)
+    vals, _ = cosine_topk(qe, ev, k=4, bv=16)
+    rvals, _ = cosine_topk_ref(jnp.asarray(qe, jnp.float32),
+                               jnp.asarray(ev, jnp.float32), 4)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals),
+                               atol=2e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 6), st.integers(2, 40),
+       st.integers(1, 6))
+def test_cosine_topk_property(seed, nq, nv, k):
+    k = min(k, nv)
+    rng = np.random.default_rng(seed)
+    qe, ev = _unit(rng, nq, 8), _unit(rng, nv, 8)
+    vals, _ = cosine_topk(qe, ev, k=k, bv=8)
+    rvals, _ = cosine_topk_ref(jnp.asarray(qe), jnp.asarray(ev), k)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals),
+                               atol=1e-5)
+
+
+# ------------------------------------------------------------ auction_topk2
+@pytest.mark.parametrize("n,m,bn", [(8, 16, 4), (100, 33, 32), (5, 7, 8)])
+def test_auction_topk2_shapes(n, m, bn):
+    rng = np.random.default_rng(2)
+    wm = rng.random((n, m)).astype(np.float32)
+    prices = rng.random(m).astype(np.float32)
+    w1, w2, j = auction_topk2(wm, prices, bn=bn)
+    rw1, rw2, rj = auction_topk2_ref(jnp.asarray(wm), jnp.asarray(prices))
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(rw1), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(rw2), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(j), np.asarray(rj))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 20), st.integers(2, 20))
+def test_auction_topk2_property(seed, n, m):
+    rng = np.random.default_rng(seed)
+    wm = np.where(rng.random((n, m)) > 0.5, rng.random((n, m)), 0.0)
+    wm = wm.astype(np.float32)
+    prices = (rng.random(m) * 2).astype(np.float32)
+    w1, w2, j = auction_topk2(wm, prices, bn=8)
+    rw1, rw2, rj = auction_topk2_ref(jnp.asarray(wm), jnp.asarray(prices))
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(rw1), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(rw2), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(j), np.asarray(rj))
+
+
+# --------------------------------------------------------------------- ssd
+def _ssd_inputs(rng, Bt, L, H, P, G, S):
+    x = rng.normal(size=(Bt, L, H, P)).astype(np.float32)
+    dt = np.log1p(np.exp(rng.normal(size=(Bt, L, H)))).astype(np.float32)
+    A = (-np.exp(rng.normal(size=H))).astype(np.float32)
+    B = rng.normal(size=(Bt, L, G, S)).astype(np.float32) / np.sqrt(S)
+    C = rng.normal(size=(Bt, L, G, S)).astype(np.float32) / np.sqrt(S)
+    D = rng.normal(size=H).astype(np.float32)
+    return x, dt, A, B, C, D
+
+
+@pytest.mark.parametrize("L,chunk", [(8, 4), (16, 8), (12, 8)])  # 12: pad path
+@pytest.mark.parametrize("H,G", [(2, 1), (4, 2)])
+def test_ssd_vs_ref(L, chunk, H, G):
+    rng = np.random.default_rng(3)
+    Bt, P, S = 2, 4, 8
+    x, dt, A, B, C, D = _ssd_inputs(rng, Bt, L, H, P, G, S)
+    y = ssd(x, dt, A, B, C, D, chunk=chunk)
+    yr = np.stack([np.asarray(ssd_ref(jnp.asarray(x[b]), jnp.asarray(dt[b]),
+                                      jnp.asarray(A), jnp.asarray(B[b]),
+                                      jnp.asarray(C[b]), jnp.asarray(D)))
+                   for b in range(Bt)])
+    np.testing.assert_allclose(np.asarray(y), yr, atol=2e-4, rtol=2e-4)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 3))
+def test_ssd_property(seed, Bt):
+    rng = np.random.default_rng(seed)
+    L, H, P, G, S = 8, 2, 4, 2, 4
+    x, dt, A, B, C, D = _ssd_inputs(rng, Bt, L, H, P, G, S)
+    y = ssd(x, dt, A, B, C, D, chunk=4)
+    yr = np.stack([np.asarray(ssd_ref(jnp.asarray(x[b]), jnp.asarray(dt[b]),
+                                      jnp.asarray(A), jnp.asarray(B[b]),
+                                      jnp.asarray(C[b]), jnp.asarray(D)))
+                   for b in range(Bt)])
+    np.testing.assert_allclose(np.asarray(y), yr, atol=2e-4, rtol=2e-4)
+    assert not np.any(np.isnan(np.asarray(y)))
+
+
+# --------------------------------------------------------- flash attention
+from repro.kernels import flash_attention, flash_attention_ref  # noqa: E402
+
+
+@pytest.mark.parametrize("S,bq,bk,causal", [
+    (16, 8, 8, True),
+    (24, 8, 16, True),
+    (20, 8, 8, False),     # padded-KV mask path
+    (17, 8, 16, True),     # both paddings
+])
+def test_flash_attention_vs_ref(S, bq, bk, causal):
+    rng = np.random.default_rng(0)
+    B, H, d = 2, 2, 8
+    q = rng.normal(size=(B, H, S, d)).astype(np.float32)
+    k = rng.normal(size=(B, H, S, d)).astype(np.float32)
+    v = rng.normal(size=(B, H, S, d)).astype(np.float32)
+    out = flash_attention(q, k, v, bq=bq, bk=bk, causal=causal)
+    ref_out = flash_attention_ref(jnp.asarray(q), jnp.asarray(k),
+                                  jnp.asarray(v), causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 20), st.booleans())
+def test_flash_attention_property(seed, S, causal):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(1, 1, S, 8)).astype(np.float32)
+    k = rng.normal(size=(1, 1, S, 8)).astype(np.float32)
+    v = rng.normal(size=(1, 1, S, 8)).astype(np.float32)
+    out = flash_attention(q, k, v, bq=8, bk=8, causal=causal)
+    ref_out = flash_attention_ref(jnp.asarray(q), jnp.asarray(k),
+                                  jnp.asarray(v), causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               atol=1e-5, rtol=1e-5)

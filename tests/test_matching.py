@@ -1,0 +1,120 @@
+"""Matching-layer tests: greedy / Hungarian / auction vs the scipy oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.optimize import linear_sum_assignment
+
+from repro.core.matching import (auction_batch, auction_score_bounds,
+                                 greedy_matching_score, hungarian_batch,
+                                 hungarian_score, make_eps_schedule)
+
+
+def _oracle(w):
+    ri, ci = linear_sum_assignment(-w)
+    return float(w[ri, ci].sum())
+
+
+def _random_weights(rng, nq, nc, thresh):
+    w = rng.random((nq, nc)).astype(np.float32)
+    return np.where(w >= thresh, w, 0.0)
+
+
+# ---------------------------------------------------------------- hungarian
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("shape", [(1, 1), (3, 7), (7, 3), (12, 12)])
+def test_hungarian_exact(seed, shape):
+    rng = np.random.default_rng(seed)
+    w = _random_weights(rng, *shape, thresh=0.5)
+    assert abs(float(hungarian_score(jnp.asarray(w))) - _oracle(w)) < 1e-4
+
+
+def test_hungarian_batch_padded():
+    rng = np.random.default_rng(3)
+    B, N, M = 6, 10, 14
+    w = np.zeros((B, N, M), np.float32)
+    nqs = rng.integers(1, N + 1, B).astype(np.int32)
+    ncs = rng.integers(1, M + 1, B).astype(np.int32)
+    oracles = []
+    for b in range(B):
+        wb = _random_weights(rng, nqs[b], ncs[b], 0.6)
+        w[b, :nqs[b], :ncs[b]] = wb
+        oracles.append(_oracle(wb))
+    so, _ = hungarian_batch(jnp.asarray(w), jnp.asarray(nqs),
+                            jnp.asarray(ncs))
+    np.testing.assert_allclose(np.asarray(so), oracles, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 9), st.integers(1, 9))
+def test_hungarian_property(seed, nq, nc):
+    rng = np.random.default_rng(seed)
+    w = _random_weights(rng, nq, nc, 0.4)
+    assert abs(float(hungarian_score(jnp.asarray(w))) - _oracle(w)) < 1e-4
+
+
+# ------------------------------------------------------------------- greedy
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 9), st.integers(1, 9))
+def test_greedy_bounds(seed, nq, nc):
+    """Greedy is a lower bound and a 1/2-approximation (Lemma 3)."""
+    rng = np.random.default_rng(seed)
+    w = _random_weights(rng, nq, nc, 0.3)
+    so = _oracle(w)
+    g = float(greedy_matching_score(jnp.asarray(w)))
+    assert g <= so + 1e-5
+    assert g >= so / 2 - 1e-5
+
+
+# ------------------------------------------------------------------ auction
+def test_auction_exact_brackets():
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        nq, nc = rng.integers(1, 16, 2)
+        w = _random_weights(rng, nq, nc, 0.6)
+        so = _oracle(w)
+        lb, ub = auction_score_bounds(w, eps_min=1e-4)
+        K = max(nq, nc)
+        assert float(lb) <= so + 1e-4
+        assert float(ub) >= so - 1e-4
+        assert float(ub) - float(lb) <= K * 2e-4 + 1e-4
+
+
+def test_auction_early_termination_lemma8():
+    """theta_lb above every SO -> every matching aborted with a certificate."""
+    rng = np.random.default_rng(1)
+    B, N, M = 4, 12, 12
+    w = np.stack([_random_weights(rng, N, M, 0.6) for _ in range(B)])
+    nqs = np.full(B, N, np.int32)
+    ncs = np.full(B, M, np.int32)
+    res = auction_batch(jnp.asarray(w), jnp.asarray(nqs), jnp.asarray(ncs),
+                        make_eps_schedule(1e-4), jnp.float32(1e9))
+    assert bool(np.all(np.asarray(res.early_stopped)))
+    # the certificate: dual bound below theta at abort
+    assert bool(np.all(np.asarray(res.ub) < 1e9))
+
+
+def test_auction_dual_always_upper_bound():
+    """ub >= SO even when theta_lb triggers early termination mid-way."""
+    rng = np.random.default_rng(2)
+    for _ in range(5):
+        nq, nc = rng.integers(3, 12, 2)
+        w = _random_weights(rng, nq, nc, 0.5)
+        so = _oracle(w)
+        # theta slightly below SO: must NOT abort (ub never sinks below SO)
+        lb, ub = auction_score_bounds(w, eps_min=1e-4, theta_lb=so - 0.05)
+        assert float(ub) >= so - 1e-4
+        assert float(lb) <= so + 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 10), st.integers(1, 10))
+def test_auction_vs_scipy(seed, nq, nc):
+    """Guards the square/perfect-matching reduction (DESIGN.md §2): the
+    asymmetric dummy-sink form breaks eps-scaling price carryover."""
+    rng = np.random.default_rng(seed)
+    w = _random_weights(rng, nq, nc, 0.5)
+    so = _oracle(w)
+    lb, ub = auction_score_bounds(w, eps_min=1e-4)
+    assert float(lb) <= so + 1e-4 <= float(ub) + 2e-4
+    assert float(ub) - float(lb) <= max(nq, nc) * 2e-4 + 1e-4

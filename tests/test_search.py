@@ -1,0 +1,113 @@
+"""End-to-end search exactness: KOIOS == brute force on every instance."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EmbeddingSimilarity, KoiosIndex, KoiosSearch,
+                        SearchParams, baseline_plus_topk, baseline_topk,
+                        brute_force_topk)
+from repro.data import make_collection, make_embeddings, sample_queries
+
+
+def _score_multiset_equal(a, b, atol=1e-3):
+    return np.allclose(np.sort(a), np.sort(b), atol=atol)
+
+
+@pytest.fixture(scope="module")
+def world(small_world):
+    coll, sim = small_world
+    return coll, sim, KoiosIndex.build(coll)
+
+
+def test_koios_matches_brute_force(world, default_params):
+    coll, sim, index = world
+    engine = KoiosSearch(coll, sim, default_params)
+    for q in sample_queries(coll, 3, seed=11):
+        res = engine.search(q)
+        ref = brute_force_topk(index, q, sim, default_params)
+        assert _score_multiset_equal(res.lb, ref.lb[:len(res.lb)])
+
+
+def test_koios_matches_baselines(world, default_params):
+    coll, sim, index = world
+    engine = KoiosSearch(coll, sim, default_params)
+    q = sample_queries(coll, 1, seed=13)[0]
+    res = engine.search(q)
+    base = baseline_topk(index, q, sim, default_params)
+    basep = baseline_plus_topk(index, q, sim, default_params)
+    assert _score_multiset_equal(res.lb, base.lb[:len(res.lb)])
+    assert _score_multiset_equal(res.lb, basep.lb[:len(res.lb)])
+
+
+@pytest.mark.parametrize("verifier", ["hungarian", "hybrid", "auction"])
+def test_verifier_modes_agree(world, default_params, verifier):
+    coll, sim, index = world
+    params = dataclasses.replace(default_params, verifier=verifier)
+    engine = KoiosSearch(coll, sim, params)
+    q = sample_queries(coll, 1, seed=17)[0]
+    res = engine.search(q)
+    ref = brute_force_topk(index, q, sim, default_params)
+    assert _score_multiset_equal(res.lb, ref.lb[:len(res.lb)])
+
+
+def test_partitions_share_theta(world, default_params):
+    """Paper §VI scale-out: partitioned search returns the same top-k."""
+    coll, sim, index = world
+    single = KoiosSearch(coll, sim, default_params, partitions=1)
+    multi = KoiosSearch(coll, sim, default_params, partitions=4)
+    q = sample_queries(coll, 1, seed=19)[0]
+    r1 = single.search(q)
+    r4 = multi.search(q)
+    assert _score_multiset_equal(r1.lb, r4.lb)
+
+
+def test_vanilla_overlap_lower_bounds_so(world, default_params):
+    """Lemma 1: |Q cap C| <= SO(Q, C) for every returned set."""
+    coll, sim, index = world
+    engine = KoiosSearch(coll, sim, default_params)
+    q = sample_queries(coll, 1, seed=23)[0]
+    res = engine.search(q)
+    for sid, score in zip(res.ids, res.lb):
+        vanilla = len(np.intersect1d(q, coll.get_set(int(sid))))
+        assert vanilla <= score + 1e-4
+
+
+def test_k_variants(world, default_params):
+    """Larger k extends, never reorders, the head of the result."""
+    coll, sim, index = world
+    engine = KoiosSearch(coll, sim, default_params)
+    q = sample_queries(coll, 1, seed=29)[0]
+    r5 = engine.search(q, k=5)
+    r10 = engine.search(q, k=10)
+    np.testing.assert_allclose(r10.lb[:5], r5.lb, atol=1e-4)
+
+
+def test_paper_ub_mode_runs(world, default_params):
+    """Reproduction mode (paper's Lemma-6 filter) executes; exactness is NOT
+    asserted because the bound is unsound (DESIGN.md §7.5)."""
+    coll, sim, index = world
+    params = dataclasses.replace(default_params, ub_mode="paper")
+    engine = KoiosSearch(coll, sim, params)
+    q = sample_queries(coll, 1, seed=31)[0]
+    res = engine.search(q)
+    assert len(res.ids) <= params.k
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_search_property_random_worlds(seed):
+    """Exactness on independently generated small worlds."""
+    rng = np.random.default_rng(seed)
+    coll = make_collection(num_sets=40, vocab_size=300, avg_size=6,
+                           max_size=12, seed=seed)
+    emb = make_embeddings(300, dim=16, cluster_size=3.0, seed=seed)
+    sim = EmbeddingSimilarity(emb)
+    params = SearchParams(k=3, alpha=0.8, chunk_size=64, verify_batch=8)
+    engine = KoiosSearch(coll, sim, params)
+    index = KoiosIndex.build(coll)
+    q = sample_queries(coll, 1, seed=seed)[0]
+    res = engine.search(q)
+    ref = brute_force_topk(index, q, sim, params)
+    assert _score_multiset_equal(res.lb, ref.lb[:len(res.lb)])

@@ -1,0 +1,62 @@
+"""End-to-end system behaviour: train a small embedding tower, plug it into
+KOIOS as the similarity provider, search, and verify exactness — the full
+story of the framework in one test (paper technique + training substrate +
+serving path)."""
+import numpy as np
+import pytest
+
+from repro.core import (EmbeddingSimilarity, KoiosIndex, KoiosSearch,
+                        SearchParams, brute_force_topk)
+from repro.data import make_collection, sample_queries
+from repro.data.embeddings import tower_embeddings
+from repro.launch.train import train
+
+
+@pytest.fixture(scope="module")
+def trained_params(tmp_path_factory):
+    ckpt = tmp_path_factory.mktemp("ck")
+    losses = train([
+        "--arch", "tinyllama-1.1b", "--smoke", "--steps", "12",
+        "--batch", "4", "--seq", "32", "--ckpt-dir", str(ckpt),
+        "--ckpt-every", "12", "--log-every", "100"])
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(ckpt))
+    step, state, meta = mgr.restore_latest()
+    return losses, state["params"]
+
+
+def test_training_reduces_loss(trained_params):
+    losses, _ = trained_params
+    assert np.mean(losses[-4:]) < np.mean(losses[:4])
+
+
+def test_trained_tower_drives_search(trained_params):
+    """The trained tower's embedding table is a valid KOIOS similarity
+    provider and the search stays exact under it."""
+    _, params = trained_params
+    table = tower_embeddings(params)
+    vocab = table.shape[0]
+    coll = make_collection(num_sets=60, vocab_size=vocab, avg_size=6,
+                           max_size=12, seed=3)
+    sim = EmbeddingSimilarity(table)
+    sp = SearchParams(k=3, alpha=0.8, chunk_size=64, verify_batch=8)
+    engine = KoiosSearch(coll, sim, sp)
+    index = KoiosIndex.build(coll)
+    q = sample_queries(coll, 1, seed=4)[0]
+    res = engine.search(q)
+    ref = brute_force_topk(index, q, sim, sp)
+    assert np.allclose(np.sort(res.lb), np.sort(ref.lb[:len(res.lb)]),
+                       atol=1e-3)
+
+
+def test_restart_resumes(trained_params, tmp_path):
+    """Preemption safety: a second run with more steps resumes from the
+    checkpoint instead of starting over."""
+    train(["--arch", "tinyllama-1.1b", "--smoke", "--steps", "6",
+           "--batch", "4", "--seq", "32", "--ckpt-dir", str(tmp_path),
+           "--ckpt-every", "3", "--log-every", "100"])
+    more = train([
+        "--arch", "tinyllama-1.1b", "--smoke", "--steps", "8",
+        "--batch", "4", "--seq", "32", "--ckpt-dir", str(tmp_path),
+        "--ckpt-every", "3", "--log-every", "100"])
+    assert len(more) == 2      # resumed at step 6, ran 6..8
