@@ -2,13 +2,23 @@
 
 Also covers the SilkMoth comparison mode (--sim ngram): the same engine
 with character n-gram Jaccard similarity (KOIOS is similarity-agnostic —
-§VIII-B)."""
+§VIII-B).
+
+Batched-serving A/B (``--batched`` / ``--per-query``): times the fused
+multi-query pipeline (``search_partition_batch``) against the per-query
+loop on the same query batch, asserting identical top-k results:
+
+    PYTHONPATH=src python -m benchmarks.response_time --batched
+"""
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
 from repro.core import (NGramJaccardSimilarity, SearchParams,
-                        baseline_plus_topk, baseline_topk, search_partition)
+                        baseline_plus_topk, baseline_topk, search_partition,
+                        search_partition_batch)
 from repro.data import sample_queries
 
 from .common import index_for, memory_footprint_bytes, timed, world
@@ -71,15 +81,87 @@ def run(datasets=("dblp", "opendata", "twitter", "wdc"), n_queries=2,
     return rows
 
 
-def main():
+def run_ab(dataset="opendata", batch_size=8, k=10, alpha=0.8,
+           verifier="hungarian", repeats=3):
+    """Batched vs per-query A/B on one query batch; identical-results check.
+
+    Both paths are warmed (jit caches), then each is timed ``repeats``
+    times over the same ``batch_size`` queries; reports mean seconds per
+    query and the batched-path speedup.
+    """
+    params = SearchParams(k=k, alpha=alpha, verifier=verifier)
+    _, sim = world(dataset)
+    index = index_for(dataset)
+    queries = sample_queries(index.coll, batch_size, seed=11)
+    zeros = [0.0] * len(queries)
+
+    def per_query():
+        return [search_partition(index, q, sim, params) for q in queries]
+
+    def batched():
+        return search_partition_batch(index, queries, sim, params, zeros)
+
+    r_pq, _ = timed(per_query)       # warm both paths before timing
+    r_b, _ = timed(batched)
+    for a, b in zip(r_pq, r_b):
+        assert np.array_equal(a.ids, b.ids) and np.array_equal(a.lb, b.lb), \
+            "batched path diverged from per-query results"
+
+    t_pq = min(timed(per_query)[1] for _ in range(repeats))
+    t_b = min(timed(batched)[1] for _ in range(repeats))
+    n = len(queries)
+    return {
+        "dataset": dataset, "batch_size": n, "verifier": verifier,
+        "per_query_s": t_pq / n, "batched_s": t_b / n,
+        "speedup": t_pq / t_b if t_b else float("inf"),
+        "identical_topk": True,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--batched", action="store_true",
+                      help="A/B the fused multi-query path (headline row)")
+    mode.add_argument("--per-query", action="store_true",
+                      help="A/B with the per-query loop as the headline row")
+    ap.add_argument("--dataset", default=None,
+                    help="restrict to one dataset (A/B default: opendata; "
+                         "table mode default: all four)")
+    ap.add_argument("--batch-size", type=int, default=8,
+                    help="A/B modes only")
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--verifier", default="hungarian",
+                    choices=["hungarian", "auction", "hybrid"],
+                    help="A/B modes only")
+    args = ap.parse_args(argv)
+
+    if args.batched or args.per_query:
+        r = run_ab(args.dataset or "opendata", args.batch_size, k=args.k,
+                   verifier=args.verifier)
+        print("dataset,mode,batch_size,mean_latency_per_query_s,"
+              "speedup_vs_per_query,identical_topk")
+        rows = [("batched", r["batched_s"], r["speedup"]),
+                ("per-query", r["per_query_s"], 1.0)]
+        if args.per_query:
+            rows.reverse()
+        for mode_name, lat, sp in rows:
+            print(f"{r['dataset']},{mode_name},{r['batch_size']},"
+                  f"{lat:.4f},{sp:.2f},{r['identical_topk']}")
+        return 0
+
+    table_kw = {"k": args.k}
+    if args.dataset:
+        table_kw["datasets"] = (args.dataset,)
     print("dataset,sim,koios_s,baseline_s,baseline+_s,speedup,"
           "em_koios,em_baseline,mem_mb")
-    for r in run():
+    for r in run(**table_kw):
         print(f"{r['dataset']},{r['sim']},{r['koios_s']:.2f},"
               f"{r['baseline_s']:.2f},{r['baseline_plus_s']:.2f},"
               f"{r['speedup']:.1f},{r['em_koios']:.0f},"
               f"{r['em_baseline']:.0f},{r['mem_mb']:.1f}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

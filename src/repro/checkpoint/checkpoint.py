@@ -1,10 +1,15 @@
-"""Pytree checkpointing: msgpack + zstd, atomic, async-capable.
+"""Pytree checkpointing: msgpack (+ optional zstd), atomic, async-capable.
 
 Layout-agnostic: arrays are serialized host-side (device_get) with dtype
 (incl. bfloat16 via ml_dtypes) and shape; restore returns numpy arrays that
 ``jax.device_put``/``NamedSharding`` reshard onto whatever mesh the restart
 uses — this is what makes elastic re-mesh restarts work (runtime/fault.py):
-a checkpoint written on a (2,16,16) mesh restores onto any other mesh."""
+a checkpoint written on a (2,16,16) mesh restores onto any other mesh.
+
+``zstandard`` is an optional dependency (requirements-dev.txt): when absent,
+checkpoints are written as raw msgpack.  ``restore`` sniffs the zstd frame
+magic, so either codec restores on any host that can decode it; the codec
+used is recorded in the checkpoint metadata by ``CheckpointManager``."""
 from __future__ import annotations
 
 import io
@@ -16,9 +21,22 @@ from typing import Any, Optional
 
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:  # pragma: no cover — exercised in the seed environment
+    zstd = None
 
 import jax
+
+# First bytes of every zstd frame (RFC 8878) — msgpack maps never start
+# with this, so the on-disk codec is sniffable without a side channel.
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def default_codec() -> str:
+    """Codec ``save`` will use on this host (recorded in ckpt metadata)."""
+    return "zstd" if zstd is not None else "raw"
 
 try:
     import ml_dtypes
@@ -76,10 +94,15 @@ def _to_host(x):
 
 
 def save(path: str, tree: Any, *, level: int = 3) -> None:
-    """Atomic synchronous save (tmp file + rename)."""
+    """Atomic synchronous save (tmp file + rename).
+
+    Compresses with zstd when available, else writes raw msgpack."""
     host_tree = jax.tree_util.tree_map(_to_host, tree)
     payload = msgpack.packb(_pack(host_tree), use_bin_type=True)
-    comp = zstd.ZstdCompressor(level=level).compress(payload)
+    if zstd is not None:
+        comp = zstd.ZstdCompressor(level=level).compress(payload)
+    else:
+        comp = payload
     d = os.path.dirname(os.path.abspath(path))
     os.makedirs(d, exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
@@ -95,7 +118,14 @@ def save(path: str, tree: Any, *, level: int = 3) -> None:
 def restore(path: str) -> Any:
     with open(path, "rb") as f:
         comp = f.read()
-    payload = zstd.ZstdDecompressor().decompress(comp)
+    if comp[:4] == _ZSTD_MAGIC:
+        if zstd is None:
+            raise RuntimeError(
+                f"{path} is zstd-compressed but zstandard is not installed "
+                "(pip install zstandard, see requirements-dev.txt)")
+        payload = zstd.ZstdDecompressor().decompress(comp)
+    else:
+        payload = comp
     return _unpack(msgpack.unpackb(payload, raw=False))
 
 

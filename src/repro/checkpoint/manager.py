@@ -7,9 +7,12 @@ import os
 import re
 from typing import Any, Optional
 
-from .checkpoint import AsyncSaver, restore, save
+from .checkpoint import AsyncSaver, default_codec, restore, save
 
-_PAT = re.compile(r"ckpt_(\d+)\.zst$")
+# suffix reflects the on-disk codec: .zst when zstd-compressed, .msgpack
+# when written raw (zstandard absent); both are discovered and restored
+_PAT = re.compile(r"ckpt_(\d+)\.(zst|msgpack)$")
+_SUFFIXES = ("zst", "msgpack")
 
 
 class CheckpointManager:
@@ -20,14 +23,32 @@ class CheckpointManager:
         self._saver = AsyncSaver() if async_save else None
 
     def _path(self, step: int) -> str:
-        return os.path.join(self.dir, f"ckpt_{step:09d}.zst")
+        """Path a new checkpoint for ``step`` will be written to."""
+        suffix = "zst" if default_codec() == "zstd" else "msgpack"
+        return os.path.join(self.dir, f"ckpt_{step:09d}.{suffix}")
+
+    def _step_paths(self, step: int):
+        """Existing checkpoint files for ``step`` (any codec)."""
+        return [p for suffix in _SUFFIXES
+                if os.path.exists(p := os.path.join(
+                    self.dir, f"ckpt_{step:09d}.{suffix}"))]
+
+    def _find_path(self, step: int):
+        """Checkpoint file to restore for ``step``.
+
+        A directory can hold the same step under both codecs (run moved
+        between hosts with/without zstandard); the newest write wins."""
+        paths = self._step_paths(step)
+        if not paths:
+            return None
+        return max(paths, key=os.path.getmtime)
 
     def steps(self):
-        out = []
+        out = set()
         for f in os.listdir(self.dir):
             m = _PAT.match(f)
             if m:
-                out.append(int(m.group(1)))
+                out.add(int(m.group(1)))      # dedupe mixed-codec dirs
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
@@ -37,6 +58,7 @@ class CheckpointManager:
     def save(self, step: int, tree: Any, metadata: Optional[dict] = None):
         meta = dict(metadata or {})
         meta["step"] = step
+        meta.setdefault("codec", default_codec())
         payload = {"meta": meta, "state": tree}
         if self._saver is not None:
             self._saver.save(self._path(step), payload)
@@ -50,7 +72,7 @@ class CheckpointManager:
         if step is None:
             return None
         self.wait()
-        payload = restore(self._path(step))
+        payload = restore(self._find_path(step))
         return step, payload["state"], payload["meta"]
 
     def wait(self):
@@ -60,7 +82,8 @@ class CheckpointManager:
     def _gc(self):
         steps = self.steps()
         for s in steps[:-self.keep]:
-            try:
-                os.unlink(self._path(s))
-            except OSError:
-                pass
+            for p in self._step_paths(s):
+                try:
+                    os.unlink(p)
+                except OSError:
+                    pass

@@ -9,14 +9,17 @@ Public API:
 from .types import SetCollection, SearchParams, SearchResult, SearchStats
 from .similarity import EmbeddingSimilarity, NGramJaccardSimilarity
 from .inverted_index import InvertedIndex
-from .token_stream import build_token_stream, expand_to_events
-from .search import KoiosSearch, KoiosIndex, search_partition, merge_topk
+from .token_stream import (build_token_stream, build_token_stream_batch,
+                           expand_to_events)
+from .search import (KoiosSearch, KoiosIndex, search_partition,
+                     search_partition_batch, merge_topk)
 from .baseline import baseline_topk, baseline_plus_topk, brute_force_topk
 
 __all__ = [
     "SetCollection", "SearchParams", "SearchResult", "SearchStats",
     "EmbeddingSimilarity", "NGramJaccardSimilarity", "InvertedIndex",
-    "build_token_stream", "expand_to_events",
-    "KoiosSearch", "KoiosIndex", "search_partition", "merge_topk",
+    "build_token_stream", "build_token_stream_batch", "expand_to_events",
+    "KoiosSearch", "KoiosIndex", "search_partition",
+    "search_partition_batch", "merge_topk",
     "baseline_topk", "baseline_plus_topk", "brute_force_topk",
 ]

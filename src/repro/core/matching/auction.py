@@ -170,13 +170,17 @@ def auction_batch(w, nq, nc, eps_schedule, theta_lb, max_rounds: int = 5000):
       w: (B, N, M) padded weight matrices (alpha-thresholded, in [0, 1]).
       nq, nc: (B,) logical sizes.
       eps_schedule: (P,) descending epsilons from :func:`make_eps_schedule`.
-      theta_lb: scalar pruning threshold (Lemma 8); use -inf to disable.
+      theta_lb: pruning threshold (Lemma 8) — scalar, or (B,) per-element
+        when one batch carries several queries' verifications (the shared
+        multi-query verify queue); use -inf to disable.
     Returns :class:`AuctionResult` of per-element score brackets.
     """
+    theta = jnp.broadcast_to(
+        jnp.asarray(theta_lb, jnp.float32), nq.shape)
     fn = jax.vmap(
-        lambda wi, nqi, nci: _auction_single(
-            wi, nqi, nci, eps_schedule, theta_lb, max_rounds))
-    lb, ub, assign, early, rounds = fn(w, nq, nc)
+        lambda wi, nqi, nci, ti: _auction_single(
+            wi, nqi, nci, eps_schedule, ti, max_rounds))
+    lb, ub, assign, early, rounds = fn(w, nq, nc, theta)
     return AuctionResult(lb=lb, ub=ub, assign=assign,
                          early_stopped=early, rounds=rounds)
 

@@ -16,8 +16,22 @@ Survivors of the refinement carry bounds [lb, ub].  We repeatedly:
 
 Verification recomputes the (|Q| x |C|) similarity block on the fly (MXU)
 instead of caching refinement similarities — see DESIGN.md §8 item 7.
+
+Multi-query serving (the batched pipeline): the loop above is factored into
+a :class:`PostprocessState` state machine that *requests* verification
+batches instead of running them inline.  :func:`run_postprocess_batch`
+advances B queries' states in lock step and routes every round's pending
+requests through one shared :class:`VerifierPool`, which pads-and-vmaps
+across queries as well as candidates — fewer, fuller ``auction_batch`` /
+``hungarian_batch`` calls with fewer distinct jit shapes.  Requests are
+grouped by padded (|Q|, |C|) shape so each row sees exactly the trace it
+would in a single-query call: ``search_batch`` results are bit-identical
+to per-query ``search``.
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
 
 import numpy as np
 import jax.numpy as jnp
@@ -34,83 +48,348 @@ def _pad_pow2(n: int, lo: int = 8) -> int:
     return p
 
 
-class Verifier:
-    """Batched exact-SO verification with Lemma-8 early termination."""
+def _kth(x: np.ndarray, mask: np.ndarray, kk: int) -> float:
+    vals = x[mask]
+    if len(vals) < kk:
+        return 0.0
+    return float(np.partition(vals, -kk)[-kk])
 
-    def __init__(self, coll: SetCollection, query: np.ndarray, sim_provider,
+
+@dataclasses.dataclass
+class VerifyRequest:
+    """One query's pending verification batch."""
+
+    query: np.ndarray      # (nq,) int32 query token ids
+    ids: np.ndarray        # (n,) candidate set ids (partition-local)
+    theta_lb: float        # Lemma-8 pruning threshold (-inf to disable)
+
+
+@dataclasses.dataclass
+class VerifyOutcome:
+    """Per-request result brackets + matching-count accounting."""
+
+    lb: np.ndarray         # (n,) primal score / exact SO
+    ub: np.ndarray         # (n,) dual bound   / exact SO
+    early: np.ndarray      # (n,) bool — certified < theta_lb (Lemma 8)
+    n_full: int = 0        # full exact matchings computed
+    n_early: int = 0       # matchings aborted by the dual bound
+
+
+class VerifierPool:
+    """Shared batched exact-SO verification across any number of queries.
+
+    Every call packs all requests' (query, candidate-set) pairs into padded
+    weight tensors and runs one solver call per distinct padded shape —
+    the multi-query generalisation of the paper's verification thread pool.
+    Shape grouping (pow2-padded |Q| and |C|) keeps the jit cache small AND
+    guarantees each row reproduces its single-request numerics exactly.
+    """
+
+    def __init__(self, coll: SetCollection, sim_provider,
                  params: SearchParams):
         self.coll = coll
-        self.query = np.asarray(query, dtype=np.int32)
         self.sim = sim_provider
         self.params = params
         self.eps_schedule = make_eps_schedule(params.auction_eps)
-        self.stats_em_early = 0
-        self.stats_em_full = 0
 
-    def weight_matrix(self, set_id: int) -> np.ndarray:
-        toks = self.coll.get_set(int(set_id))
-        s = np.asarray(self.sim.pairwise(self.query, toks))
-        return np.where(s >= self.params.alpha, s, 0.0).astype(np.float32)
+    # ---------------------------------------------------------- weights
+    # Cap on the candidate tokens one fused pairwise call may cover: the
+    # fused matrix computes all requests' rows against all requests'
+    # columns, so its waste grows with the number of requests fused —
+    # chunking bounds that while typical serving batches still fuse into
+    # one dispatch.
+    _FUSE_TOKEN_CAP = 16384
 
-    def _batch_weights(self, ids):
-        """Pad batch to verify_batch and columns to pow2 so the vmap'd
-        verifiers compile O(log max-set-size) distinct shapes."""
-        mats = [self.weight_matrix(i) for i in ids]
-        nq = len(self.query)
-        nq_pad = _pad_pow2(nq)          # logical nq passed separately
-        c_pad = _pad_pow2(max(m.shape[1] for m in mats))
-        B = max(self.params.verify_batch, len(ids))
-        w = np.zeros((B, nq_pad, c_pad), np.float32)
-        ncs = np.zeros(B, np.int32)
-        for b, m in enumerate(mats):
-            w[b, :nq, :m.shape[1]] = m
-            ncs[b] = m.shape[1]
-        return w, ncs
+    def weights_for_requests(self, requests: Sequence[VerifyRequest]
+                             ) -> List[List[np.ndarray]]:
+        """Alpha-thresholded (|Q_r|, |C_i|) weight blocks per request,
+        fusing as many requests as the token cap allows per ``pairwise``
+        dispatch (typically all of them)."""
+        all_toks = [[self.coll.get_set(int(i)) for i in r.ids]
+                    for r in requests]
+        sizes = [sum(len(t) for t in ts) for ts in all_toks]
+        out: List[List[np.ndarray]] = []
+        lo = 0
+        while lo < len(requests):
+            hi, tot = lo + 1, sizes[lo]
+            while hi < len(requests) and tot + sizes[hi] <= self._FUSE_TOKEN_CAP:
+                tot += sizes[hi]
+                hi += 1
+            out.extend(self._fused_weights(requests[lo:hi],
+                                           all_toks[lo:hi]))
+            lo = hi
+        return out
 
-    def verify(self, ids, theta_lb: float):
-        """Returns (lb, ub, early) arrays for the given set ids.
+    def _fused_weights(self, requests: Sequence[VerifyRequest], toks
+                       ) -> List[List[np.ndarray]]:
+        """One ``pairwise`` dispatch for a run of requests.
+
+        All queries' elements stack into the row axis and all candidate
+        sets' tokens into the column axis; each request then slices its own
+        (rows, per-set columns) blocks.  Every element is the same
+        independent d-dim dot product as a per-set call, so the blocks are
+        bit-identical to per-request (and per-set) weight computation.
+        """
+        assert all(ts for ts in toks), "empty verification request"
+        q_cuts = np.zeros(len(requests) + 1, np.int64)
+        np.cumsum([len(r.query) for r in requests], out=q_cuts[1:])
+        c_cuts = np.zeros(len(requests) + 1, np.int64)
+        np.cumsum([sum(len(t) for t in ts) for ts in toks], out=c_cuts[1:])
+        q_cat = np.concatenate([np.asarray(r.query, np.int32)
+                                for r in requests])
+        c_cat = np.concatenate([t for ts in toks for t in ts])
+        s = np.asarray(self.sim.pairwise(q_cat, c_cat))
+        s = np.where(s >= self.params.alpha, s, 0.0).astype(np.float32)
+        out = []
+        for ri, ts in enumerate(toks):
+            block = s[q_cuts[ri]:q_cuts[ri + 1], c_cuts[ri]:c_cuts[ri + 1]]
+            cuts = np.zeros(len(ts) + 1, np.int64)
+            np.cumsum([len(t) for t in ts], out=cuts[1:])
+            out.append([block[:, cuts[i]:cuts[i + 1]]
+                        for i in range(len(ts))])
+        return out
+
+    def weights_for(self, query: np.ndarray, ids) -> List[np.ndarray]:
+        """Weight blocks of one (query, candidate batch) pair."""
+        return self.weights_for_requests(
+            [VerifyRequest(np.asarray(query, np.int32), np.asarray(ids),
+                           float("-inf"))])[0]
+
+    # ---------------------------------------------------- batch building
+    def _grouped(self, entries):
+        """Pack entries = [(mats, nq, theta), ...] into padded solver
+        batches, one per distinct (nq_pad, c_pad) shape.  Yields
+        (w, nqs, ncs, thetas, spans) with spans[i] = row range of entry i.
+        Rows are independent under vmap, so batch composition never
+        changes a row's result."""
+        groups: dict = {}
+        for i, (mats, nq, _theta) in enumerate(entries):
+            key = (_pad_pow2(nq), _pad_pow2(max(m.shape[1] for m in mats)))
+            groups.setdefault(key, []).append(i)
+        for (nq_pad, c_pad), idxs in groups.items():
+            rows = sum(len(entries[i][0]) for i in idxs)
+            # pow2 row padding above verify_batch: cross-query rounds shrink
+            # as queries finish, and an exact-fit B would recompile the
+            # solver every round (single-query batches stay <= verify_batch,
+            # i.e. exactly the historical shape)
+            B = _pad_pow2(rows, self.params.verify_batch)
+            w = np.zeros((B, nq_pad, c_pad), np.float32)
+            nqs = np.zeros(B, np.int32)
+            ncs = np.zeros(B, np.int32)
+            thetas = np.full(B, -np.inf, np.float32)
+            spans = {}
+            r = 0
+            for i in idxs:
+                mats, nq, theta = entries[i]
+                for m in mats:
+                    w[r, :m.shape[0], :m.shape[1]] = m
+                    nqs[r] = nq
+                    ncs[r] = m.shape[1]
+                    thetas[r] = theta
+                    r += 1
+                spans[i] = (r - len(mats), r)
+            yield w, nqs, ncs, thetas, spans
+
+    def _exact_grouped(self, entries) -> List[np.ndarray]:
+        """Exact SO per entry via shape-grouped ``hungarian_batch``."""
+        out: List[Optional[np.ndarray]] = [None] * len(entries)
+        for w, nqs, ncs, _thetas, spans in self._grouped(entries):
+            so, _ = hungarian_batch(jnp.asarray(w), jnp.asarray(nqs),
+                                    jnp.asarray(ncs))
+            so = np.asarray(so)
+            for i, (lo, hi) in spans.items():
+                out[i] = so[lo:hi].copy()
+        return out
+
+    # ------------------------------------------------------------- verify
+    def verify_requests(self, requests: Sequence[VerifyRequest]
+                        ) -> List[VerifyOutcome]:
+        """Verify all requests' candidates in (few) fused solver calls.
 
         Brackets are exact (lb == ub == SO) unless early-terminated, in
         which case ub < theta_lb certifies exclusion (Lemma 8).
         """
-        ids = np.asarray(ids)
-        n = len(ids)
-        w, ncs = self._batch_weights(ids)
-        nqs = np.full(len(w), len(self.query), np.int32)
+        all_mats = self.weights_for_requests(requests)
+        entries = [(mats, len(r.query), float(r.theta_lb))
+                   for mats, r in zip(all_mats, requests)]
+
         if self.params.verifier == "hungarian":
-            so, _ = hungarian_batch(jnp.asarray(w), jnp.asarray(nqs),
-                                    jnp.asarray(ncs))
-            so = np.asarray(so)[:n]
-            self.stats_em_full += n
-            return so.copy(), so.copy(), np.zeros(n, bool)
+            return [VerifyOutcome(lb=so, ub=so.copy(),
+                                  early=np.zeros(len(so), bool),
+                                  n_full=len(so))
+                    for so in self._exact_grouped(entries)]
 
-        res = auction_batch(jnp.asarray(w), jnp.asarray(nqs),
-                            jnp.asarray(ncs), self.eps_schedule,
-                            jnp.float32(theta_lb))
-        lb = np.asarray(res.lb)[:n].copy()
-        ub = np.asarray(res.ub)[:n].copy()
-        early = np.asarray(res.early_stopped)[:n].copy()
-        self.stats_em_early += int(early.sum())
-        self.stats_em_full += int((~early).sum())
+        outcomes: List[Optional[VerifyOutcome]] = [None] * len(requests)
+        for w, nqs, ncs, thetas, spans in self._grouped(entries):
+            res = auction_batch(jnp.asarray(w), jnp.asarray(nqs),
+                                jnp.asarray(ncs), self.eps_schedule,
+                                jnp.asarray(thetas))
+            lb_all = np.asarray(res.lb)
+            ub_all = np.asarray(res.ub)
+            early_all = np.asarray(res.early_stopped)
+            for i, (lo, hi) in spans.items():
+                out = VerifyOutcome(lb=lb_all[lo:hi].copy(),
+                                    ub=ub_all[lo:hi].copy(),
+                                    early=early_all[lo:hi].copy())
+                out.n_early = int(out.early.sum())
+                out.n_full = int((~out.early).sum())
+                outcomes[i] = out
 
-        # exact fallback for brackets that straddle theta_lb (cannot decide)
-        ambiguous = (~early) & (lb < theta_lb) & (ub > theta_lb)
-        # also tighten any non-degenerate bracket so downstream ordering is
-        # exact when hybrid mode is requested
-        if self.params.verifier == "hybrid":
-            ambiguous |= (~early) & (ub - lb > 1e-6)
-        if ambiguous.any():
-            amb_ids = ids[ambiguous]
-            w2, ncs2 = self._batch_weights(amb_ids)
-            so, _ = hungarian_batch(
-                jnp.asarray(w2),
-                jnp.asarray(np.full(len(w2), len(self.query), np.int32)),
-                jnp.asarray(ncs2))
-            so = np.asarray(so)[:len(amb_ids)]
-            lb[ambiguous] = so
-            ub[ambiguous] = so
-            self.stats_em_full += len(amb_ids)
-        return lb, ub, early
+        # exact fallback for brackets that straddle theta_lb (cannot decide);
+        # hybrid mode also tightens any non-degenerate bracket so downstream
+        # ordering is exact
+        fallback = []
+        for i, (req, out) in enumerate(zip(requests, outcomes)):
+            amb = (~out.early) & (out.lb < req.theta_lb) \
+                & (out.ub > req.theta_lb)
+            if self.params.verifier == "hybrid":
+                amb |= (~out.early) & (out.ub - out.lb > 1e-6)
+            if amb.any():
+                fallback.append((i, amb))
+        if fallback:
+            sub = [( [entries[i][0][j] for j in amb.nonzero()[0]],
+                    entries[i][1], float("-inf")) for i, amb in fallback]
+            for (i, amb), so in zip(fallback, self._exact_grouped(sub)):
+                out = outcomes[i]
+                out.lb[amb] = so
+                out.ub[amb] = so
+                out.n_full += int(amb.sum())
+        return outcomes
+
+
+class Verifier:
+    """Per-query facade over :class:`VerifierPool` (baselines, single-query
+    post-processing).  Keeps the historical (lb, ub, early) interface and
+    stats counters."""
+
+    def __init__(self, coll: SetCollection, query: np.ndarray, sim_provider,
+                 params: SearchParams):
+        self.pool = VerifierPool(coll, sim_provider, params)
+        self.query = np.asarray(query, dtype=np.int32)
+        self.stats_em_early = 0
+        self.stats_em_full = 0
+
+    def weight_matrix(self, set_id: int) -> np.ndarray:
+        return self.pool.weights_for(self.query, [set_id])[0]
+
+    def verify(self, ids, theta_lb: float):
+        out = self.pool.verify_requests(
+            [VerifyRequest(self.query, np.asarray(ids), float(theta_lb))])[0]
+        self.stats_em_early += out.n_early
+        self.stats_em_full += out.n_full
+        return out.lb, out.ub, out.early
+
+
+class PostprocessState:
+    """Alg. 2 as a resumable state machine for one query.
+
+    ``next_request()`` advances the filters until a verification batch is
+    needed (returning a :class:`VerifyRequest`) or the query is finished
+    (returning None); ``apply()`` folds the batch's outcome back in.  The
+    request/apply cycle is exactly the inline loop of the single-query
+    path, which is what lets ``run_postprocess_batch`` drive B queries in
+    lock step with bit-identical per-query results.
+    """
+
+    def __init__(self, query: np.ndarray, surv_ids: np.ndarray,
+                 surv_lb: np.ndarray, surv_ub: np.ndarray, theta_lb0: float,
+                 params: SearchParams, stats: SearchStats):
+        self.query = np.asarray(query, dtype=np.int32)
+        self.params = params
+        self.stats = stats
+        self.ids = np.asarray(surv_ids)
+        self.lb = np.asarray(surv_lb, np.float64).copy()
+        self.ub = np.asarray(surv_ub, np.float64).copy()
+        self.n = len(self.ids)
+        self.live = np.ones(self.n, bool)
+        self.verified = np.zeros(self.n, bool)
+        self.em_early = 0
+        self.em_full = 0
+        self.theta_lb = max(theta_lb0, _kth(self.lb, self.live, params.k))
+        self._guard = 0
+        self._phase = "main"
+        self._pending: Optional[np.ndarray] = None
+        self._cand: Optional[np.ndarray] = None
+        self._order: Optional[np.ndarray] = None
+
+    def next_request(self) -> Optional[VerifyRequest]:
+        k = self.params.k
+        while True:
+            if self._phase == "main":
+                self._guard += 1
+                assert self._guard < 10 * self.n + 100, \
+                    "post-processing failed to converge"
+                self.theta_lb = max(self.theta_lb,
+                                    _kth(self.lb, self.live, k))
+                # UB filter (sets that can no longer reach the top-k;
+                # strict < keeps ties, which is always safe)
+                drop = self.live & (self.ub < self.theta_lb)
+                self.stats.pruned_postprocess += int((drop
+                                                      & ~self.verified).sum())
+                self.live &= ~drop
+                theta_ub = _kth(self.ub, self.live, k)
+                no_em = self.live & ~self.verified & (self.lb >= theta_ub)
+                need = self.live & ~self.verified \
+                    & (self.ub > self.theta_lb) & ~no_em
+                if not need.any():
+                    self.stats.pruned_no_em += int(no_em.sum())
+                    self._phase = "assemble"
+                    continue
+                # verify the highest-ub pending sets as one batch
+                nz = need.nonzero()[0]
+                order = np.argsort(-self.ub[nz])
+                self._pending = nz[order[:self.params.verify_batch]]
+                return VerifyRequest(self.query, self.ids[self._pending],
+                                     float(self.theta_lb))
+            if self._phase == "assemble":
+                self._cand = self.live.nonzero()[0]
+                order = self._cand[np.argsort(-self.lb[self._cand],
+                                              kind="stable")][:k]
+                if self.params.exact_scores and len(order):
+                    pend = order[~self.verified[order]]
+                    if len(pend):
+                        self._pending = pend
+                        self._phase = "exact"
+                        return VerifyRequest(self.query, self.ids[pend],
+                                             float("-inf"))
+                self._order = order
+                self._phase = "done"
+            if self._phase == "done":
+                return None
+
+    def apply(self, out: VerifyOutcome) -> None:
+        idx = self._pending
+        self._pending = None
+        self.em_early += out.n_early
+        self.em_full += out.n_full
+        if self._phase == "main":
+            self.lb[idx] = np.maximum(self.lb[idx], out.lb)
+            self.ub[idx] = np.minimum(self.ub[idx], out.ub)
+            self.verified[idx] = True
+            # early-terminated sets are certified below theta_lb
+            self.live[idx[out.early]] = False
+        else:  # exact-scores pass over the final top-k
+            assert self._phase == "exact"
+            self.lb[idx] = out.lb
+            self.ub[idx] = out.ub
+            self.verified[idx] = True
+            self._order = self._cand[np.argsort(-self.lb[self._cand],
+                                                kind="stable")
+                                     ][:self.params.k]
+            self._phase = "done"
+
+    def result(self) -> SearchResult:
+        assert self._phase == "done", "postprocess state not drained"
+        order = self._order
+        self.stats.pruned_em_early += self.em_early
+        self.stats.exact_matches += self.em_full
+        self.stats.theta_lb_final = float(self.theta_lb)
+        return SearchResult(
+            ids=self.ids[order].astype(np.int32),
+            lb=self.lb[order].astype(np.float32),
+            ub=self.ub[order].astype(np.float32),
+            stats=self.stats,
+        )
 
 
 def run_postprocess(coll: SetCollection, query: np.ndarray, sim_provider,
@@ -118,67 +397,31 @@ def run_postprocess(coll: SetCollection, query: np.ndarray, sim_provider,
                     surv_ub: np.ndarray, theta_lb0: float,
                     params: SearchParams,
                     stats: SearchStats) -> SearchResult:
-    k = params.k
-    ids = np.asarray(surv_ids)
-    lb = np.asarray(surv_lb, np.float64).copy()
-    ub = np.asarray(surv_ub, np.float64).copy()
-    n = len(ids)
-    live = np.ones(n, bool)
-    verified = np.zeros(n, bool)
-    verifier = Verifier(coll, query, sim_provider, params)
+    """Single-query post-processing (drives the state machine inline)."""
+    pool = VerifierPool(coll, sim_provider, params)
+    state = PostprocessState(query, surv_ids, surv_lb, surv_ub, theta_lb0,
+                             params, stats)
+    req = state.next_request()
+    while req is not None:
+        state.apply(pool.verify_requests([req])[0])
+        req = state.next_request()
+    return state.result()
 
-    def kth(x, mask, kk):
-        vals = x[mask]
-        if len(vals) < kk:
-            return 0.0
-        return float(np.partition(vals, -kk)[-kk])
 
-    theta_lb = max(theta_lb0, kth(lb, live, k))
-    guard = 0
+def run_postprocess_batch(coll: SetCollection, sim_provider,
+                          states: Sequence[PostprocessState],
+                          params: SearchParams) -> List[SearchResult]:
+    """Drive B queries' post-processing in lock step over one shared
+    verification queue.  Each round gathers every unfinished query's
+    pending batch and verifies them all in fused solver calls."""
+    pool = VerifierPool(coll, sim_provider, params)
+    reqs = {i: st.next_request() for i, st in enumerate(states)}
     while True:
-        guard += 1
-        assert guard < 10 * n + 100, "post-processing failed to converge"
-        theta_lb = max(theta_lb, kth(lb, live, k))
-        # UB filter (sets that can no longer reach the top-k; strict <
-        # keeps ties, which is always safe)
-        drop = live & (ub < theta_lb)
-        stats.pruned_postprocess += int((drop & ~verified).sum())
-        live &= ~drop
-        theta_ub = kth(ub, live, k)
-        no_em = live & ~verified & (lb >= theta_ub)     # Lemma 7
-        need = live & ~verified & (ub > theta_lb) & ~no_em
-        if not need.any():
-            stats.pruned_no_em += int(no_em.sum())
+        active = [i for i, r in reqs.items() if r is not None]
+        if not active:
             break
-        # verify the highest-ub pending sets as one batch
-        order = np.argsort(-ub[need.nonzero()[0]])
-        batch_idx = need.nonzero()[0][order[:params.verify_batch]]
-        blb, bub, bearly = verifier.verify(ids[batch_idx], theta_lb)
-        lb[batch_idx] = np.maximum(lb[batch_idx], blb)
-        ub[batch_idx] = np.minimum(ub[batch_idx], bub)
-        verified[batch_idx] = True
-        # early-terminated sets are certified below theta_lb
-        live[batch_idx[bearly]] = False
-
-    # ---- assemble final top-k by lb --------------------------------------
-    cand = live.nonzero()[0]
-    order = cand[np.argsort(-lb[cand], kind="stable")][:k]
-
-    if params.exact_scores and len(order):
-        pend = order[~verified[order]]
-        if len(pend):
-            blb, bub, _ = verifier.verify(ids[pend], -np.inf)
-            lb[pend] = blb
-            ub[pend] = bub
-            verified[pend] = True
-        order = cand[np.argsort(-lb[cand], kind="stable")][:k]
-
-    stats.pruned_em_early += verifier.stats_em_early
-    stats.exact_matches += verifier.stats_em_full
-    stats.theta_lb_final = float(theta_lb)
-    return SearchResult(
-        ids=ids[order].astype(np.int32),
-        lb=lb[order].astype(np.float32),
-        ub=ub[order].astype(np.float32),
-        stats=stats,
-    )
+        outs = pool.verify_requests([reqs[i] for i in active])
+        for i, out in zip(active, outs):
+            states[i].apply(out)
+            reqs[i] = states[i].next_request()
+    return [st.result() for st in states]

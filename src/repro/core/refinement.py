@@ -135,11 +135,11 @@ def _run_refinement(ev_set, ev_q, ev_slot, ev_sim, cap, k: int,
             jnp.sum(killed_per_chunk) + jnp.sum(killed))
 
 
-def run_refinement(events: EventStream, set_sizes: np.ndarray, nq: int,
-                   total_slots: int, k: int, alpha: float,
-                   chunk_size: int = 256,
-                   ub_mode: str = "sound") -> RefinementResult:
-    num_sets = len(set_sizes)
+def _dispatch_refinement(events: EventStream, set_sizes: np.ndarray, nq: int,
+                         total_slots: int, k: int, alpha: float,
+                         chunk_size: int, ub_mode: str):
+    """Launch the jit'd refinement scan; returns (device results, n_chunks)
+    without forcing the computation (JAX dispatch is async)."""
     ev_set, ev_q, ev_slot, ev_sim = pad_events(events, chunk_size)
     cap = jnp.minimum(jnp.asarray(set_sizes, jnp.int32), jnp.int32(nq))
     # pow2 bitmask width: bounds jit variants to O(log |Q|) shapes
@@ -148,18 +148,51 @@ def run_refinement(events: EventStream, set_sizes: np.ndarray, nq: int,
     while p < q_words:
         p *= 2
     q_words = p
-    S, ub, seen, alive, theta_lb, n_pruned = _run_refinement(
+    out = _run_refinement(
         jnp.asarray(ev_set), jnp.asarray(ev_q), jnp.asarray(ev_slot),
-        jnp.asarray(ev_sim), cap, k, num_sets, q_words, total_slots,
+        jnp.asarray(ev_sim), cap, k, len(set_sizes), q_words, total_slots,
         ub_mode, jnp.float32(alpha))
+    return out, ev_set.shape[0]
+
+
+def _materialize_refinement(out, n_chunks: int,
+                            events: EventStream) -> RefinementResult:
+    S, ub, seen, alive, theta_lb, n_pruned = out
     stats = SearchStats(
         candidates=int(jnp.sum(seen)),
         pruned_refinement=int(n_pruned),
         stream_tuples=events.n_tuples,
         stream_events=len(events),
-        refinement_chunks=ev_set.shape[0],
+        refinement_chunks=n_chunks,
         theta_lb_final=float(theta_lb),
     )
     return RefinementResult(
         S=np.asarray(S), ub=np.asarray(ub), seen=np.asarray(seen),
         alive=np.asarray(alive), theta_lb=float(theta_lb), stats=stats)
+
+
+def run_refinement(events: EventStream, set_sizes: np.ndarray, nq: int,
+                   total_slots: int, k: int, alpha: float,
+                   chunk_size: int = 256,
+                   ub_mode: str = "sound") -> RefinementResult:
+    out, n_chunks = _dispatch_refinement(events, set_sizes, nq, total_slots,
+                                         k, alpha, chunk_size, ub_mode)
+    return _materialize_refinement(out, n_chunks, events)
+
+
+def run_refinement_batch(event_streams, queries, set_sizes: np.ndarray,
+                         total_slots: int, k: int, alpha: float,
+                         chunk_size: int = 256,
+                         ub_mode: str = "sound") -> "list[RefinementResult]":
+    """Per-query refinement for B queries with pipelined dispatch.
+
+    Each query runs the exact single-query scan (same jit, same operands —
+    results are bit-identical to B ``run_refinement`` calls), but all B
+    scans are dispatched before any result is materialized, overlapping
+    XLA execution with the host-side padding/dispatch of later queries.
+    """
+    launched = [_dispatch_refinement(ev, set_sizes, len(q), total_slots, k,
+                                     alpha, chunk_size, ub_mode)
+                for ev, q in zip(event_streams, queries)]
+    return [_materialize_refinement(out, n_chunks, ev)
+            for (out, n_chunks), ev in zip(launched, event_streams)]

@@ -5,6 +5,11 @@ Single-partition pipeline:
     ->  refinement (chunked vectorized filters)  ->  post-processing
     (No-EM + batched verification w/ Lemma-8 early termination).
 
+Multi-query serving: ``KoiosSearch.search_batch`` fuses B queries through
+the same pipeline — one stacked similarity sweep per partition and a shared
+cross-query verification queue (``run_postprocess_batch``) — returning
+results bit-identical to per-query ``search``.
+
 Partitioned scale-out (paper §VI last paragraph): the repository is split
 into contiguous shards; every shard runs refinement + post-processing with
 a *shared* theta_lb (the max over shards — on a device mesh this is an
@@ -21,9 +26,11 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .inverted_index import InvertedIndex
-from .postprocess import run_postprocess
-from .refinement import run_refinement
-from .token_stream import build_token_stream, expand_to_events
+from .postprocess import (PostprocessState, run_postprocess,
+                          run_postprocess_batch)
+from .refinement import run_refinement, run_refinement_batch
+from .token_stream import (build_token_stream, build_token_stream_batch,
+                           expand_to_events)
 from .types import SearchParams, SearchResult, SearchStats, SetCollection
 
 
@@ -51,9 +58,7 @@ def search_partition(index: KoiosIndex, query: np.ndarray, sim_provider,
     events = expand_to_events(stream, index.inv)
 
     if len(events) == 0:
-        return SearchResult(
-            ids=np.zeros(0, np.int32), lb=np.zeros(0, np.float32),
-            ub=np.zeros(0, np.float32), stats=SearchStats())
+        return _empty_result()
 
     ref = run_refinement(
         events, coll.set_sizes, len(query), coll.total_tokens,
@@ -67,6 +72,56 @@ def search_partition(index: KoiosIndex, query: np.ndarray, sim_provider,
     return SearchResult(
         ids=(result.ids + index.id_offset).astype(np.int32),
         lb=result.lb, ub=result.ub, stats=result.stats)
+
+
+def _empty_result() -> SearchResult:
+    return SearchResult(
+        ids=np.zeros(0, np.int32), lb=np.zeros(0, np.float32),
+        ub=np.zeros(0, np.float32), stats=SearchStats())
+
+
+def search_partition_batch(index: KoiosIndex, queries: Sequence[np.ndarray],
+                           sim_provider, params: SearchParams,
+                           theta_lb0s: Sequence[float]
+                           ) -> "list[SearchResult]":
+    """Batched :func:`search_partition`: B queries against one partition.
+
+    The token stream is built for all queries with one blocked sweep,
+    refinement runs per query (reusing one jit cache), and post-processing
+    advances all queries in lock step over a shared verification queue.
+    Per-query results are bit-identical to B :func:`search_partition` calls.
+    """
+    coll = index.coll
+    queries = [np.asarray(q, dtype=np.int32) for q in queries]
+    streams = build_token_stream_batch(queries, sim_provider, params.alpha)
+    results: "list[Optional[SearchResult]]" = [None] * len(queries)
+    live_pos, live_queries, live_events = [], [], []
+    for i, (query, stream) in enumerate(zip(queries, streams)):
+        events = expand_to_events(stream, index.inv)
+        if len(events) == 0:
+            results[i] = _empty_result()
+            continue
+        live_pos.append(i)
+        live_queries.append(query)
+        live_events.append(events)
+    refs = run_refinement_batch(
+        live_events, live_queries, coll.set_sizes, coll.total_tokens,
+        params.k, params.alpha, params.chunk_size, params.ub_mode)
+    states, state_pos = [], []
+    for i, query, ref in zip(live_pos, live_queries, refs):
+        ref.theta_lb = max(ref.theta_lb, float(theta_lb0s[i]))
+        surv = (ref.seen & ref.alive).nonzero()[0]
+        states.append(PostprocessState(
+            query, surv, ref.S[surv], ref.ub[surv], ref.theta_lb, params,
+            ref.stats))
+        state_pos.append(i)
+    for i, r in zip(state_pos,
+                    run_postprocess_batch(coll, sim_provider, states,
+                                          params)):
+        results[i] = SearchResult(
+            ids=(r.ids + index.id_offset).astype(np.int32),
+            lb=r.lb, ub=r.ub, stats=r.stats)
+    return results
 
 
 def merge_topk(results: Sequence[SearchResult], k: int) -> SearchResult:
@@ -115,3 +170,30 @@ class KoiosSearch:
             if len(r.lb) >= params.k:
                 theta_lb = max(theta_lb, float(r.lb[params.k - 1]))
         return merge_topk(results, params.k)
+
+    def search_batch(self, queries: Sequence[np.ndarray],
+                     k: Optional[int] = None) -> "list[SearchResult]":
+        """Batched multi-query search — one fused pipeline for B queries.
+
+        Semantically equivalent to ``[self.search(q) for q in queries]``
+        (bit-identical ids/lb/ub) but executes the similarity sweep and all
+        verification batches across queries together: one blocked
+        (sum |Q_b| x |V|) matmul per vocab block and a shared cross-query
+        verification queue per partition (see ``core.postprocess``).
+        """
+        params = self.params if k is None else dataclasses.replace(
+            self.params, k=k)
+        queries = [np.asarray(q, dtype=np.int32) for q in queries]
+        theta_lb = [0.0] * len(queries)
+        per_query: "list[list[SearchResult]]" = [[] for _ in queries]
+        # Partitions stay sequential, sharing each query's running theta_lb
+        # exactly as in `search` (the mesh path all-reduces this bound).
+        for part in self.partitions:
+            results = search_partition_batch(part, queries, self.sim,
+                                             params, theta_lb)
+            for i, r in enumerate(results):
+                per_query[i].append(r)
+                if len(r.lb) >= params.k:
+                    theta_lb[i] = max(theta_lb[i],
+                                      float(r.lb[params.k - 1]))
+        return [merge_topk(rs, params.k) for rs in per_query]

@@ -14,6 +14,11 @@ implementation — the paper also walks its priority queue on the host).
 The refinement phase consumes the stream *expanded to posting-level events*
 through the inverted index (paper: "probing I_s"), still in descending
 order:  (set, q, slot, sim) per posting of each streamed token.
+
+Multi-query serving: :func:`build_token_stream_batch` stacks B queries into
+one (sum |Q_b| x |V|) blocked sweep — one provider dispatch and one host
+compaction per vocab block for the whole batch — and returns per-query
+streams bit-identical to B single-query calls.
 """
 from __future__ import annotations
 
@@ -51,37 +56,10 @@ class EventStream:
         return len(self.sim)
 
 
-def build_token_stream(query: np.ndarray, sim_provider, alpha: float,
-                       block_size: int = 4096) -> TokenStream:
-    """Collect all (q, t, sim>=alpha) pairs via blocked similarity compute.
-
-    ``sim_provider`` must expose ``query_vs_vocab_block(q_ids, lo, hi)`` and
-    ``vocab_size``.  Identity pairs (q, q) are always included with sim 1.0
-    (paper §V: a query element is returned for itself on first probe — this
-    initialises bounds with the vanilla overlap and covers out-of-vocabulary
-    elements).
-    """
-    query = np.asarray(query, dtype=np.int32)
+def _finalize_stream(query: np.ndarray, q_pos: np.ndarray, token: np.ndarray,
+                     sim: np.ndarray, vocab: int) -> TokenStream:
+    """Identity-pair completion + global descending sort for one query."""
     nq = len(query)
-    vocab = sim_provider.vocab_size
-    qs, ts, ss = [], [], []
-    for lo in range(0, vocab, block_size):
-        hi = min(lo + block_size, vocab)
-        block = np.asarray(sim_provider.query_vs_vocab_block(query, lo, hi))
-        qi, tj = np.nonzero(block >= alpha)
-        if len(qi):
-            qs.append(qi.astype(np.int32))
-            ts.append((tj + lo).astype(np.int32))
-            ss.append(block[qi, tj].astype(np.float32))
-    if qs:
-        q_pos = np.concatenate(qs)
-        token = np.concatenate(ts)
-        sim = np.concatenate(ss)
-    else:
-        q_pos = np.zeros(0, np.int32)
-        token = np.zeros(0, np.int32)
-        sim = np.zeros(0, np.float32)
-
     # Identity pairs (q, q, 1.0) — add any that the provider missed (e.g.
     # degenerate embeddings) and dedupe.
     in_vocab = query < vocab
@@ -103,21 +81,97 @@ def build_token_stream(query: np.ndarray, sim_provider, alpha: float,
     return TokenStream(q_pos=q_pos[order], token=token[order], sim=sim[order])
 
 
+def build_token_stream_batch(queries, sim_provider, alpha: float,
+                             block_size: int = 4096) -> "list[TokenStream]":
+    """Token streams for B queries from ONE blocked similarity sweep.
+
+    The queries are stacked into a single (sum |Q_b|, |V|-block) similarity
+    matmul per vocabulary block — B times fewer provider dispatches and one
+    host-side ``>= alpha`` compaction per block instead of B of them.  Rows
+    of the stacked result are exactly the rows each per-query call would
+    compute, and the per-query finalize (identity pairs, stable sort) is
+    shared with :func:`build_token_stream`, so the returned streams are
+    bit-identical to the per-query path.
+
+    ``sim_provider`` must expose ``query_vs_vocab_block(q_ids, lo, hi)`` and
+    ``vocab_size``.  Identity pairs (q, q) are always included with sim 1.0
+    (paper §V: a query element is returned for itself on first probe — this
+    initialises bounds with the vanilla overlap and covers out-of-vocabulary
+    elements).
+    """
+    queries = [np.asarray(q, dtype=np.int32) for q in queries]
+    if not queries:
+        return []
+    vocab = sim_provider.vocab_size
+    stacked = np.concatenate(queries)
+    # row ranges of each query inside the stacked matrix
+    bounds = np.zeros(len(queries) + 1, np.int64)
+    np.cumsum([len(q) for q in queries], out=bounds[1:])
+
+    qs = [[] for _ in queries]
+    ts = [[] for _ in queries]
+    ss = [[] for _ in queries]
+    for lo in range(0, vocab, block_size):
+        hi = min(lo + block_size, vocab)
+        block = np.asarray(sim_provider.query_vs_vocab_block(stacked, lo, hi))
+        qi, tj = np.nonzero(block >= alpha)          # one compaction, B queries
+        if not len(qi):
+            continue
+        vals = block[qi, tj].astype(np.float32)
+        # qi is ascending (row-major nonzero), so each query's rows are one
+        # contiguous slice; split at the stacked row bounds
+        cuts = np.searchsorted(qi, bounds)
+        for b in range(len(queries)):
+            s, e = cuts[b], cuts[b + 1]
+            if e > s:
+                qs[b].append((qi[s:e] - bounds[b]).astype(np.int32))
+                ts[b].append((tj[s:e] + lo).astype(np.int32))
+                ss[b].append(vals[s:e])
+
+    out = []
+    for b, query in enumerate(queries):
+        if qs[b]:
+            q_pos = np.concatenate(qs[b])
+            token = np.concatenate(ts[b])
+            sim = np.concatenate(ss[b])
+        else:
+            q_pos = np.zeros(0, np.int32)
+            token = np.zeros(0, np.int32)
+            sim = np.zeros(0, np.float32)
+        out.append(_finalize_stream(query, q_pos, token, sim, vocab))
+    return out
+
+
+def build_token_stream(query: np.ndarray, sim_provider, alpha: float,
+                       block_size: int = 4096) -> TokenStream:
+    """Single-query token stream (see :func:`build_token_stream_batch`)."""
+    return build_token_stream_batch([query], sim_provider, alpha,
+                                    block_size)[0]
+
+
 def expand_to_events(stream: TokenStream, index: InvertedIndex) -> EventStream:
-    """Expand stream tuples through the inverted index to per-set events."""
+    """Expand stream tuples through the inverted index to per-set events.
+
+    Fully vectorized: posting ranges become one flat gather index built from
+    repeated range starts plus within-range offsets (cumulative-offset
+    trick) — no Python loop over stream tokens.
+    """
     counts = index.posting_counts()
     reps = counts[stream.token]
-    set_id = np.empty(int(reps.sum()), dtype=np.int32)
-    slot = np.empty(len(set_id), dtype=np.int64)
+    total = int(reps.sum())
     q_pos = np.repeat(stream.q_pos, reps)
     sim = np.repeat(stream.sim, reps)
-    out = 0
-    for t, n in zip(stream.token, reps):
-        if n:
-            lo = index.tok_indptr[t]
-            set_id[out:out + n] = index.posting_set[lo:lo + n]
-            slot[out:out + n] = index.posting_slot[lo:lo + n]
-            out += n
+    if total:
+        starts = index.tok_indptr[stream.token]      # (T,) posting-range lo
+        ends = np.cumsum(reps)                       # event offset per tuple
+        within = np.arange(total, dtype=np.int64) - np.repeat(ends - reps,
+                                                              reps)
+        gather = np.repeat(starts, reps) + within
+        set_id = index.posting_set[gather]
+        slot = index.posting_slot[gather]
+    else:
+        set_id = np.zeros(0, dtype=np.int32)
+        slot = np.zeros(0, dtype=np.int64)
     return EventStream(set_id=set_id, q_pos=q_pos, slot=slot, sim=sim,
                        n_tuples=len(stream))
 

@@ -17,7 +17,8 @@ from repro.launch.steps import (make_decode_step, make_prefill_step,  # noqa: E4
                                 make_train_step, train_shardings)
 from repro.models import SHAPES, build, input_specs, shape_applicable  # noqa: E402
 from repro.models.config import ModelConfig                      # noqa: E402
-from repro.runtime.hlo_analysis import (parse_collectives,       # noqa: E402
+from repro.runtime.hlo_analysis import (normalize_cost_analysis,  # noqa: E402
+                                        parse_collectives,
                                         roofline_terms, PEAK_FLOPS)
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
@@ -66,8 +67,9 @@ def _nonembed_param_count(specs) -> int:
 def _calibrate() -> dict:
     """Verify the two cost-analysis facts the methodology relies on."""
     A = jax.ShapeDtypeStruct((256, 256), jax.numpy.float32)
-    f1 = jax.jit(lambda a, b: a @ b).lower(A, A).compile() \
-        .cost_analysis()["flops"]
+    f1 = normalize_cost_analysis(
+        jax.jit(lambda a, b: a @ b).lower(A, A).compile()
+        .cost_analysis())["flops"]
     mac2 = abs(f1 / (2 * 256 ** 3) - 1.0) < 0.05
 
     W = jax.ShapeDtypeStruct((8, 256, 256), jax.numpy.float32)
@@ -75,7 +77,8 @@ def _calibrate() -> dict:
     def scanned(x, ws):
         return jax.lax.scan(lambda h, w: (h @ w, None), x, ws)[0]
 
-    f2 = jax.jit(scanned).lower(A, W).compile().cost_analysis()["flops"]
+    f2 = normalize_cost_analysis(
+        jax.jit(scanned).lower(A, W).compile().cost_analysis())["flops"]
     loop_once = abs(f2 / (2 * 256 ** 3) - 1.0) < 0.05
     return {"mac_is_2flops": bool(mac2),
             "scan_body_counted_once": bool(loop_once)}
@@ -111,7 +114,7 @@ def _compile_cell(cfg: ModelConfig, shape_name: str, mesh):
 
 def _measure(compiled) -> dict:
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = normalize_cost_analysis(compiled.cost_analysis())
     txt = compiled.as_text()
     coll = parse_collectives(txt)
     return {
@@ -281,7 +284,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     out["status"] = "ok"
     out["production"] = _measure(compiled)
     print(compiled.memory_analysis())
-    ca = compiled.cost_analysis() or {}
+    ca = normalize_cost_analysis(compiled.cost_analysis())
     print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
     del compiled
 

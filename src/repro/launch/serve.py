@@ -8,6 +8,10 @@ and per-shard top-k lists are merged.  The embedding tower is any of the
 assigned architectures (or the frozen-table provider standing in for
 FastText).
 
+Request batches run through the fused multi-query pipeline
+(``KoiosSearch.search_batch``) by default; ``--per-query`` serves each
+query independently (same results, the paper-style baseline).
+
 Smoke scale:
     PYTHONPATH=src python -m repro.launch.serve --requests 4 --k 5
 """
@@ -25,24 +29,38 @@ from ..data import (EmbeddingTableProvider, dataset_preset, make_embeddings,
 
 
 class SearchServer:
-    """Batched request loop over a partitioned KOIOS engine."""
+    """Batched request loop over a partitioned KOIOS engine.
+
+    ``serve_batch`` runs the whole request batch through the fused
+    multi-query pipeline (``KoiosSearch.search_batch``) by default: one
+    stacked similarity sweep and a shared cross-query verification queue
+    per partition.  ``batched=False`` falls back to the per-query loop
+    (identical results — the A/B baseline of
+    ``benchmarks/response_time.py``)."""
 
     def __init__(self, coll, sim, params: SearchParams, partitions: int):
         self.engine = KoiosSearch(coll, sim, params, partitions=partitions)
 
-    def serve_batch(self, queries):
+    def serve_batch(self, queries, batched: bool = True):
         """One batched request: list of query sets -> list of results."""
-        out = []
-        for q in queries:
+        queries = [np.asarray(q, np.int32) for q in queries]
+        if batched:
             t0 = time.time()
-            res = self.engine.search(np.asarray(q, np.int32))
-            out.append({
-                "ids": res.ids.tolist(),
-                "scores": res.lb.tolist(),
-                "latency_s": round(time.time() - t0, 4),
-                "stats": res.stats.as_dict(),
-            })
-        return out
+            results = self.engine.search_batch(queries)
+            lat = round((time.time() - t0) / max(len(queries), 1), 4)
+            lats = [lat] * len(queries)       # amortized per-query latency
+        else:
+            results, lats = [], []
+            for q in queries:
+                t0 = time.time()
+                results.append(self.engine.search(q))
+                lats.append(round(time.time() - t0, 4))
+        return [{
+            "ids": res.ids.tolist(),
+            "scores": res.lb.tolist(),
+            "latency_s": lat,
+            "stats": res.stats.as_dict(),
+        } for res, lat in zip(results, lats)]
 
 
 def main(argv=None):
@@ -55,6 +73,9 @@ def main(argv=None):
     ap.add_argument("--partitions", type=int, default=2)
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--batch-size", type=int, default=2)
+    ap.add_argument("--per-query", action="store_true",
+                    help="serve each query independently (A/B baseline for "
+                         "the default fused multi-query path)")
     args = ap.parse_args(argv)
 
     print(f"[serve] building corpus ({args.dataset} @ {args.scale})")
@@ -69,7 +90,7 @@ def main(argv=None):
     queries = sample_queries(coll, args.requests, seed=1)
     for lo in range(0, len(queries), args.batch_size):
         batch = queries[lo:lo + args.batch_size]
-        results = server.serve_batch(batch)
+        results = server.serve_batch(batch, batched=not args.per_query)
         for i, r in enumerate(results):
             print(f"req {lo+i}: top-{args.k} ids={r['ids'][:5]}... "
                   f"scores={[round(s,2) for s in r['scores'][:5]]} "

@@ -47,6 +47,26 @@ _RING_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
                 "all-to-all": 1.0, "collective-permute": 1.0}
 
 
+def normalize_cost_analysis(ca) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns a flat ``{counter: value}`` dict, newer versions a
+    list with one such dict per program executable, and some backends
+    return ``None``.  Callers always want the entry-program dict; indexing
+    ``["flops"]`` / ``.get`` on the raw return crashes on the list shape.
+    """
+    if ca is None:
+        return {}
+    if isinstance(ca, dict):
+        return dict(ca)
+    if isinstance(ca, (list, tuple)):
+        for entry in ca:
+            if entry:
+                return dict(entry)
+        return {}
+    raise TypeError(f"unrecognized cost_analysis() return: {type(ca)!r}")
+
+
 def _type_bytes(type_str: str) -> int:
     total = 0
     for dt, dims in _SHAPE_RE.findall(type_str):

@@ -1,0 +1,126 @@
+"""Seeded-RNG stand-in for ``hypothesis`` when it is not installed.
+
+The seed environment ships without ``hypothesis``; importing this module
+(from ``conftest.py``, before test collection) installs a minimal shim into
+``sys.modules`` so that ``from hypothesis import given, settings,
+strategies as st`` keeps working.  The shim re-runs each property test
+``max_examples`` times with values drawn from a deterministically seeded
+``numpy`` RNG — a plain randomized sweep, no shrinking.  When the real
+``hypothesis`` is available (see requirements-dev.txt) it wins and the shim
+is inert.
+
+Only the strategy surface this repo uses is provided: ``integers``,
+``floats``, ``booleans``, ``sampled_from``, ``lists``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_ignored) -> _Strategy:
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(seq) -> _Strategy:
+    choices = list(seq)
+    return _Strategy(lambda rng: choices[int(rng.integers(len(choices)))])
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Accepts (and mostly ignores) hypothesis settings kwargs."""
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    """Run the test once per example with strategy draws appended.
+
+    Strategies bind to the *rightmost* positional parameters (hypothesis
+    semantics); any leading parameters stay visible to pytest as fixtures.
+    """
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        assert len(params) >= len(strategies), fn
+        fixture_params = params[:len(params) - len(strategies)]
+        drawn_names = [p.name for p in params[len(fixture_params):]]
+        seed_base = zlib.crc32(
+            f"{fn.__module__}.{fn.__qualname__}".encode())
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            for i in range(getattr(wrapper, "_max_examples",
+                                   _DEFAULT_MAX_EXAMPLES)):
+                rng = np.random.default_rng([seed_base, i])
+                drawn = {name: s.draw(rng)
+                         for name, s in zip(drawn_names, strategies)}
+                fn(*args, **kwargs, **drawn)
+
+        # pytest must see only the fixture parameters; drop the
+        # functools.wraps __wrapped__ so the original signature (which
+        # still lists the strategy-bound params) is not re-discovered.
+        wrapper.__signature__ = sig.replace(parameters=fixture_params)
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper._max_examples = getattr(fn, "_max_examples",
+                                       _DEFAULT_MAX_EXAMPLES)
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` if the real package is absent."""
+    try:
+        import hypothesis  # noqa: F401 — real package wins
+        return
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists"):
+        setattr(strat, name, globals()[name])
+    mod.strategies = strat
+    mod.__is_shim__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strat
+
+
+install()

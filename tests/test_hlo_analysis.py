@@ -2,10 +2,13 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.models.layers import blocked_xent, softmax_xent
-from repro.runtime.hlo_analysis import (CollectiveStats, parse_collectives,
+from repro.runtime.hlo_analysis import (CollectiveStats,
+                                        normalize_cost_analysis,
+                                        parse_collectives,
                                         roofline_terms, PEAK_FLOPS, HBM_BW,
                                         ICI_BW)
 
@@ -53,6 +56,28 @@ def test_real_compiled_module_parses():
         jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile()
     stats = parse_collectives(c.as_text())
     assert stats.total_operand_bytes == 0    # single device: no collectives
+
+
+def test_normalize_cost_analysis_shapes():
+    """Regression: ``Compiled.cost_analysis()`` is a flat dict on older
+    JAX, a list of per-executable dicts on newer versions, or None."""
+    d = {"flops": 7.0, "bytes accessed": 3.0}
+    assert normalize_cost_analysis(d) == d
+    assert normalize_cost_analysis([d]) == d              # new list shape
+    assert normalize_cost_analysis([{}, d]) == d          # skips empties
+    assert normalize_cost_analysis(None) == {}
+    assert normalize_cost_analysis([]) == {}
+    with pytest.raises(TypeError):
+        normalize_cost_analysis(42)
+
+
+def test_normalize_cost_analysis_live():
+    """Whatever this JAX version returns normalizes to a flops dict."""
+    c = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((16, 16), jnp.float32),
+        jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile()
+    ca = normalize_cost_analysis(c.cost_analysis())
+    assert ca.get("flops", 0) > 0
 
 
 @settings(max_examples=10, deadline=None)

@@ -16,9 +16,9 @@ from repro.launch.train import train
 def trained_params(tmp_path_factory):
     ckpt = tmp_path_factory.mktemp("ck")
     losses = train([
-        "--arch", "tinyllama-1.1b", "--smoke", "--steps", "12",
+        "--arch", "tinyllama-1.1b", "--smoke", "--steps", "32",
         "--batch", "4", "--seq", "32", "--ckpt-dir", str(ckpt),
-        "--ckpt-every", "12", "--log-every", "100"])
+        "--ckpt-every", "32", "--log-every", "100"])
     from repro.checkpoint import CheckpointManager
     mgr = CheckpointManager(str(ckpt))
     step, state, meta = mgr.restore_latest()
@@ -27,7 +27,9 @@ def trained_params(tmp_path_factory):
 
 def test_training_reduces_loss(trained_params):
     losses, _ = trained_params
-    assert np.mean(losses[-4:]) < np.mean(losses[:4])
+    # window of 8: single-step loss is noisy at batch 4 (the seed's 4-step
+    # window flaked); the 8-step means separate cleanly after 32 steps
+    assert np.mean(losses[-8:]) < np.mean(losses[:8])
 
 
 def test_trained_tower_drives_search(trained_params):
