@@ -9,6 +9,13 @@ multi-query pipeline (``search_partition_batch``) against the per-query
 loop on the same query batch, asserting identical top-k results:
 
     PYTHONPATH=src python -m benchmarks.response_time --batched
+
+Scale-out A/B (``--partitions N --overlap``): times the overlapped
+partition scheduler (async refinement dispatch, global verify queue,
+bidirectional theta_lb feedback) against the sequential running-max
+partition loop, asserting bit-identical results:
+
+    PYTHONPATH=src python -m benchmarks.response_time --partitions 4 --overlap
 """
 from __future__ import annotations
 
@@ -118,6 +125,51 @@ def run_ab(dataset="opendata", batch_size=8, k=10, alpha=0.8,
     }
 
 
+def run_partition_ab(dataset="opendata", partitions=4, batch_size=8, k=10,
+                     alpha=0.8, verifier="hungarian", repeats=3):
+    """Overlapped scheduler vs sequential partition loop at P partitions.
+
+    Both arms run the same engine (same plan decomposition, same shared
+    verifier pool); the A/B isolates the scheduler's drive order —
+    overlapped refinement dispatch + the global cross-partition queue +
+    bidirectional theta_lb feedback vs the pre-scheduler running-max host
+    loop.  Results are asserted bit-identical; reports mean seconds per
+    query and the overlap speedup.
+    """
+    from repro.core import KoiosSearch
+
+    params = SearchParams(k=k, alpha=alpha, verifier=verifier)
+    coll, sim = world(dataset)
+    engine = KoiosSearch(coll, sim, params, partitions=partitions)
+    queries = sample_queries(coll, batch_size, seed=11)
+
+    def sequential():
+        return engine.search_batch(queries, schedule="sequential")
+
+    def overlap():
+        return engine.search_batch(queries, schedule="overlap")
+
+    r_seq, _ = timed(sequential)     # warm both paths before timing
+    r_ovl, _ = timed(overlap)
+    st = engine.scheduler_stats
+    for a, b in zip(r_seq, r_ovl):
+        assert np.array_equal(a.ids, b.ids) and np.array_equal(a.lb, b.lb), \
+            "overlapped schedule diverged from the sequential partition loop"
+
+    t_seq = min(timed(sequential)[1] for _ in range(repeats))
+    t_ovl = min(timed(overlap)[1] for _ in range(repeats))
+    n = len(queries)
+    return {
+        "dataset": dataset, "partitions": partitions, "batch_size": n,
+        "verifier": verifier,
+        "sequential_s": t_seq / n, "overlap_s": t_ovl / n,
+        "speedup": t_seq / t_ovl if t_ovl else float("inf"),
+        "bound_raises": st.bound_raises,
+        "backward_raises": st.backward_raises,
+        "identical_topk": True,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     mode = ap.add_mutually_exclusive_group()
@@ -125,16 +177,36 @@ def main(argv=None):
                       help="A/B the fused multi-query path (headline row)")
     mode.add_argument("--per-query", action="store_true",
                       help="A/B with the per-query loop as the headline row")
+    mode.add_argument("--overlap", action="store_true",
+                      help="A/B the overlapped partition scheduler vs the "
+                           "sequential partition loop (use --partitions)")
     ap.add_argument("--dataset", default=None,
                     help="restrict to one dataset (A/B default: opendata; "
                          "table mode default: all four)")
     ap.add_argument("--batch-size", type=int, default=8,
                     help="A/B modes only")
+    ap.add_argument("--partitions", type=int, default=4,
+                    help="--overlap A/B only: repository partition count")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--verifier", default="hungarian",
                     choices=["hungarian", "auction", "hybrid"],
                     help="A/B modes only")
     args = ap.parse_args(argv)
+
+    if args.overlap:
+        r = run_partition_ab(args.dataset or "opendata", args.partitions,
+                             args.batch_size, k=args.k,
+                             verifier=args.verifier)
+        print("dataset,schedule,partitions,batch_size,"
+              "mean_latency_per_query_s,speedup_vs_sequential,"
+              "bound_raises,backward_raises,identical_topk")
+        for name, lat, sp in (("overlap", r["overlap_s"], r["speedup"]),
+                              ("sequential", r["sequential_s"], 1.0)):
+            print(f"{r['dataset']},{name},{r['partitions']},"
+                  f"{r['batch_size']},{lat:.4f},{sp:.2f},"
+                  f"{r['bound_raises']},{r['backward_raises']},"
+                  f"{r['identical_topk']}")
+        return 0
 
     if args.batched or args.per_query:
         r = run_ab(args.dataset or "opendata", args.batch_size, k=args.k,

@@ -57,6 +57,14 @@ def main(argv=None) -> None:
                   f"{r['baseline_s']:.2f},{r['baseline_plus_s']:.2f},"
                   f"{r['speedup']:.1f},{r['em_koios']:.0f},"
                   f"{r['em_baseline']:.0f},{r['mem_mb']:.1f}")
+        _banner("Scale-out: overlapped scheduler vs sequential partitions")
+        print("dataset,partitions,sequential_s,overlap_s,speedup,"
+              "bound_raises,backward_raises")
+        r = response_time.run_partition_ab(
+            partitions=4, batch_size=4 if args.fast else 8)
+        print(f"{r['dataset']},{r['partitions']},{r['sequential_s']:.4f},"
+              f"{r['overlap_s']:.4f},{r['speedup']:.2f},"
+              f"{r['bound_raises']},{r['backward_raises']}")
         if not args.fast:
             _banner("SilkMoth-mode (char n-gram similarity, §VIII-B)")
             for r in response_time.run(datasets=("opendata",),

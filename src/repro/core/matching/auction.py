@@ -48,17 +48,37 @@ class AuctionResult:
 def _auction_single(w, nq, nc, eps_schedule, theta_lb, max_rounds):
     """One padded weight matrix (N, M); logical sizes (nq, nc) <= (N, M).
 
-    Optional matching with nonnegative weights equals *perfect* matching on
-    the K x K zero-padded square matrix (K = max(N, M)): zero-weight edges
-    play the role of "unmatched".  The square/perfect form is what makes
-    eps-scaling sound — prices carry over between phases (Bertsekas) and
-    eps-CS + perfect assignment implies the final score is within K*eps of
-    SO.  (The asymmetric form with dummy sinks does NOT admit price
-    carryover; see tests/test_matching.py::test_auction_vs_scipy which
-    guards this.)  The dual objective
-        D = sum_j p_j + sum_i max_j (w_ij - p_j)
-    upper-bounds SO at every round for any nonneg prices (weak duality) —
-    this is the Lemma-8 early-termination bound.
+    The problem is embedded in the K x K zero-padded square matrix
+    (K = max(N, M)) but only the nq *logical* rows ever bid — the zero
+    padding rows have nothing to win and forcing them through the bidding
+    (the historical square/perfect formulation) costs O(K - nq) extra
+    rounds per phase, the auction analogue of the square-padding cost the
+    nq-bounded Hungarian augmentation already eliminated
+    (``hungarian._solve_square_min(n_aug=nq)``).  Soundness of the
+    nq-row form:
+
+      * lb is the score of a feasible (optional) matching, so lb <= SO
+        always;
+      * the dual objective
+            D = sum_j p_j + sum_i max(0, max_j (w_ij - p_j))
+        upper-bounds SO for any nonneg prices (weak duality) — this is the
+        Lemma-8 early-termination bound, unchanged;
+      * at phase end every assigned row i satisfies eps-CS
+        (profit_i >= best_i - eps).  Summing eps-CS against an optimal
+        assignment sigma* gives
+            SO <= lb + nq*eps + sum_{j in sigma*\\A} p_j
+               <= lb + nq*eps + leftover,
+        with leftover = the total price of columns left unassigned.  The
+        phase-transition rules below (zero unmatched columns' prices,
+        release eps-CS violators *with their column zeroed*, to a
+        fixpoint) maintain the invariant that a positively-priced column
+        is always assigned — within a phase a bid can only transfer a
+        column, never abandon it, and prices only rise — so at
+        convergence leftover == 0 and the bracket is nq-tight:
+            ub - lb <= nq * eps_final
+        (the contract tests/test_matching.py guards against Hungarian).
+        ``leftover`` stays in the ub formula as a defensive term; if the
+        invariant were ever broken the bracket would widen, never lie.
     """
     N, M = w.shape
     K = max(N, M)                    # square, zero-padded
@@ -77,25 +97,66 @@ def _auction_single(w, nq, nc, eps_schedule, theta_lb, max_rounds):
         best = jnp.max(profits, axis=1)
         return jnp.sum(prices) + jnp.sum(jnp.maximum(best, 0.0))
 
+    def _cols_taken(assign):
+        hit = jnp.zeros((K,), jnp.int32).at[jnp.clip(assign, 0, K - 1)].max(
+            (assign >= 0).astype(jnp.int32))
+        return hit > 0
+
     def phase(carry, eps):
-        prices, ub_best, early, total_rounds = carry
-        # reset assignment, keep prices (standard eps-scaling)
-        assign0 = jnp.full((K,), -1, dtype=jnp.int32)
-        owner0 = jnp.full((K,), -1, dtype=jnp.int32)
+        prev_assign, prev_eps, prices, ub_best, early, total_rounds = carry
+        # Phase transition, in place of the classical reset-and-rebid:
+        #   1. stale-price hygiene — a column that ended the previous phase
+        #      unmatched keeps no price, and matched columns are rebated the
+        #      previous eps (winning bids overshoot the competitive level by
+        #      up to eps; carrying the overshoot strands columns that then
+        #      attract no bids at smaller eps);
+        #   2. the previous assignment is KEPT and rows whose eps-CS is
+        #      violated at the new eps are released *with their column's
+        #      price zeroed*, iterated to a fixpoint (zeroing a column can
+        #      invalidate another row's eps-CS).  Resetting the assignment
+        #      while keeping prices makes the nq-row form oscillate between
+        #      phases, and releasing without zeroing strands price mass on
+        #      abandoned columns (the historical square form hid both by
+        #      having the zero rows re-absorb every column).
+        # Both steps are sound for any nonneg prices: the dual bound is
+        # price-history-free, and eps-CS is re-established here and then
+        # preserved within the phase (alternative profits only fall as
+        # prices rise; a held column's price is constant while held; a
+        # column is only freed by eviction, which re-awards it).  The
+        # invariant they buy: at phase end every positively-priced column
+        # is assigned, so the optimality gap of the final assignment is
+        # nq*eps with NO unassigned-price leftover.
+        prices = jnp.where(_cols_taken(prev_assign),
+                           jnp.maximum(prices - prev_eps, 0.0), 0.0)
+
+        def rel_body(s):
+            assign, prices, _ = s
+            profits = wm - prices[None, :]
+            best = jnp.max(profits, axis=1)
+            held = jnp.clip(assign, 0, K - 1)
+            viol = (assign >= 0) & (profits[rows, held] < best - eps)
+            freed = jnp.zeros((K,), bool).at[held].max(viol)
+            prices = jnp.where(freed, 0.0, prices)
+            assign = jnp.where(viol, jnp.int32(-1), assign)
+            return assign, prices, jnp.any(viol)
+
+        assign0, prices, _ = jax.lax.while_loop(
+            lambda s: s[2], rel_body,
+            (prev_assign, prices, jnp.bool_(True)))
 
         def cond(s):
-            assign, owner, prices, ub_best, early, r = s
-            unfinished = jnp.any(assign == -1)
+            assign, prices, ub_best, early, r = s
+            unfinished = jnp.any((assign == -1) & row_valid)
             return unfinished & (~early) & (r < max_rounds)
 
         def body(s):
-            assign, owner, prices, ub_best, early, r = s
+            assign, prices, ub_best, early, r = s
             profits = wm - prices[None, :]
             w1 = jnp.max(profits, axis=1)
             jstar = jnp.argmax(profits, axis=1).astype(jnp.int32)
             second = jnp.where(cols[None, :] == jstar[:, None], _NEG, profits)
             w2 = jnp.max(second, axis=1)
-            bidding = assign == -1
+            bidding = (assign == -1) & row_valid
             bid_val = w1 + prices[jstar] - w2 + eps   # = w[i,j*] - w2 + eps
 
             # dense bid matrix: rows bid on their jstar only (gather-only
@@ -117,34 +178,36 @@ def _auction_single(w, nq, nc, eps_schedule, theta_lb, max_rounds):
 
             assign = jnp.where(won, jstar,
                                jnp.where(evict, jnp.int32(-1), assign))
-            owner = jnp.where(has_bid, col_winner, owner)
             prices = jnp.where(has_bid, col_best, prices)
 
             d = dual_bound(prices)
             ub_best = jnp.minimum(ub_best, d)
             early = early | (ub_best < theta_lb)
-            return assign, owner, prices, ub_best, early, r + 1
+            return assign, prices, ub_best, early, r + 1
 
-        assign, owner, prices, ub_best, early, r = jax.lax.while_loop(
-            cond, body, (assign0, owner0, prices, ub_best, early,
-                         jnp.int32(0)))
-        converged = jnp.all(assign >= 0)
-        return (prices, ub_best, early, total_rounds + r), (assign, converged)
+        assign, prices, ub_best, early, r = jax.lax.while_loop(
+            cond, body, (assign0, prices, ub_best, early, jnp.int32(0)))
+        return (assign, eps, prices, ub_best, early, total_rounds + r), None
 
     prices0 = jnp.zeros((K,), dtype=jnp.float32)
     ub0 = dual_bound(prices0)
-    carry0 = (prices0, ub0, jnp.bool_(False), jnp.int32(0))
-    (prices, ub_best, early, rounds), (assigns, convs) = jax.lax.scan(
+    carry0 = (jnp.full((K,), -1, dtype=jnp.int32), jnp.float32(0.0),
+              prices0, ub0, jnp.bool_(False), jnp.int32(0))
+    (assign, _, prices, ub_best, early, rounds), _ = jax.lax.scan(
         phase, carry0, eps_schedule)
-    assign, converged = assigns[-1], convs[-1]
+    converged = jnp.all((assign >= 0) | ~row_valid)
 
-    matched = assign >= 0
+    matched = (assign >= 0) & row_valid
     gathered = wm[rows, jnp.clip(assign, 0, K - 1)]
     lb = jnp.sum(jnp.where(matched, gathered, 0.0))
     eps_final = eps_schedule[-1]
-    # eps-CS slack is one eps per person of the square problem (K of them).
+    # eps-CS slack is one eps per *logical* person plus the price mass of
+    # unassigned columns (0 in the common case — see docstring).
+    leftover = jnp.sum(jnp.where(_cols_taken(assign), 0.0, prices))
     ub = jnp.where(converged & ~early,
-                   jnp.minimum(ub_best, lb + jnp.float32(K) * eps_final),
+                   jnp.minimum(ub_best,
+                               lb + nq.astype(jnp.float32) * eps_final
+                               + leftover),
                    ub_best)
     # an early-stopped element's lb is not meaningful; its ub < theta_lb is.
     lb = jnp.where(early, 0.0, lb)

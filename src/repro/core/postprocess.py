@@ -293,10 +293,12 @@ class PostprocessState:
 
     def __init__(self, query: np.ndarray, surv_ids: np.ndarray,
                  surv_lb: np.ndarray, surv_ub: np.ndarray, theta_lb0: float,
-                 params: SearchParams, stats: SearchStats):
+                 params: SearchParams, stats: SearchStats,
+                 id_base: int = 0):
         self.query = np.asarray(query, dtype=np.int32)
         self.params = params
         self.stats = stats
+        self.id_base = int(id_base)   # request-id translation (global pool)
         self.ids = np.asarray(surv_ids)
         self.lb = np.asarray(surv_lb, np.float64).copy()
         self.ub = np.asarray(surv_ub, np.float64).copy()
@@ -339,7 +341,8 @@ class PostprocessState:
                 nz = need.nonzero()[0]
                 order = np.argsort(-self.ub[nz])
                 self._pending = nz[order[:self.params.verify_batch]]
-                return VerifyRequest(self.query, self.ids[self._pending],
+                return VerifyRequest(self.query,
+                                     self.ids[self._pending] + self.id_base,
                                      float(self.theta_lb))
             if self._phase == "assemble":
                 self._cand = self.live.nonzero()[0]
@@ -350,12 +353,24 @@ class PostprocessState:
                     if len(pend):
                         self._pending = pend
                         self._phase = "exact"
-                        return VerifyRequest(self.query, self.ids[pend],
+                        return VerifyRequest(self.query,
+                                             self.ids[pend] + self.id_base,
                                              float("-inf"))
                 self._order = order
                 self._phase = "done"
             if self._phase == "done":
                 return None
+
+    def raise_theta(self, theta: float) -> None:
+        """Externally raise the pruning bound (cross-tile/cross-partition
+        feedback from the scheduler).  Monotone and always sound: theta is
+        a certified lower bound on the query's global k-th score, and the
+        main loop only ever uses theta_lb to discard sets with ub below
+        it.  No effect once the final ordering has been assembled."""
+        self.theta_lb = max(self.theta_lb, float(theta))
+
+    def finished(self) -> bool:
+        return self._phase == "done"
 
     def apply(self, out: VerifyOutcome) -> None:
         idx = self._pending
@@ -392,29 +407,16 @@ class PostprocessState:
         )
 
 
-def run_postprocess(coll: SetCollection, query: np.ndarray, sim_provider,
-                    surv_ids: np.ndarray, surv_lb: np.ndarray,
-                    surv_ub: np.ndarray, theta_lb0: float,
-                    params: SearchParams,
-                    stats: SearchStats) -> SearchResult:
-    """Single-query post-processing (drives the state machine inline)."""
-    pool = VerifierPool(coll, sim_provider, params)
-    state = PostprocessState(query, surv_ids, surv_lb, surv_ub, theta_lb0,
-                             params, stats)
-    req = state.next_request()
-    while req is not None:
-        state.apply(pool.verify_requests([req])[0])
-        req = state.next_request()
-    return state.result()
-
-
-def run_postprocess_batch(coll: SetCollection, sim_provider,
-                          states: Sequence[PostprocessState],
-                          params: SearchParams) -> List[SearchResult]:
-    """Drive B queries' post-processing in lock step over one shared
-    verification queue.  Each round gathers every unfinished query's
-    pending batch and verifies them all in fused solver calls."""
-    pool = VerifierPool(coll, sim_provider, params)
+def drive_states(pool: VerifierPool, states: Sequence[PostprocessState],
+                 round_hook=None) -> None:
+    """THE post-processing drive loop: advance any number of state
+    machines in lock step over one shared verification queue.  Each round
+    gathers every unfinished state's pending batch, verifies them all in
+    fused solver calls, applies the outcomes, and (optionally) calls
+    ``round_hook(n_active)`` — the scheduler's bound-feedback point —
+    before the states emit their next requests.  Single-query
+    post-processing, the batched pipeline, and the partition scheduler are
+    all this loop with different state lists."""
     reqs = {i: st.next_request() for i, st in enumerate(states)}
     while True:
         active = [i for i, r in reqs.items() if r is not None]
@@ -423,5 +425,29 @@ def run_postprocess_batch(coll: SetCollection, sim_provider,
         outs = pool.verify_requests([reqs[i] for i in active])
         for i, out in zip(active, outs):
             states[i].apply(out)
+        if round_hook is not None:
+            round_hook(len(active))
+        for i in active:
             reqs[i] = states[i].next_request()
+
+
+def run_postprocess(coll: SetCollection, query: np.ndarray, sim_provider,
+                    surv_ids: np.ndarray, surv_lb: np.ndarray,
+                    surv_ub: np.ndarray, theta_lb0: float,
+                    params: SearchParams,
+                    stats: SearchStats) -> SearchResult:
+    """Single-query post-processing — :func:`drive_states` with one state
+    (compatibility wrapper)."""
+    state = PostprocessState(query, surv_ids, surv_lb, surv_ub, theta_lb0,
+                             params, stats)
+    return run_postprocess_batch(coll, sim_provider, [state], params)[0]
+
+
+def run_postprocess_batch(coll: SetCollection, sim_provider,
+                          states: Sequence[PostprocessState],
+                          params: SearchParams) -> List[SearchResult]:
+    """B queries in lock step over one shared queue — a thin wrapper that
+    owns the pool and drains the states (see :func:`drive_states`)."""
+    pool = VerifierPool(coll, sim_provider, params)
+    drive_states(pool, states)
     return [st.result() for st in states]

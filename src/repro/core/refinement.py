@@ -171,28 +171,43 @@ def _materialize_refinement(out, n_chunks: int,
         alive=np.asarray(alive), theta_lb=float(theta_lb), stats=stats)
 
 
+def run_refinement_many(event_streams, nqs, set_sizes: np.ndarray,
+                        total_slots: int, k: int, alpha: float,
+                        chunk_size: int = 256,
+                        ub_mode: str = "sound") -> "list[RefinementResult]":
+    """THE refinement entry point: any number of (events, |Q|) pairs with
+    pipelined dispatch.
+
+    Each element runs the exact single-query scan (same jit, same operands
+    — results are bit-identical however the list is sliced), but all scans
+    are dispatched before any result is materialized, overlapping XLA
+    execution with the host-side padding/dispatch of later elements.  The
+    partition scheduler uses :func:`_dispatch_refinement` /
+    :func:`_materialize_refinement` directly to interleave dispatch across
+    partitions with different ``set_sizes``.
+    """
+    launched = [_dispatch_refinement(ev, set_sizes, int(nq), total_slots, k,
+                                     alpha, chunk_size, ub_mode)
+                for ev, nq in zip(event_streams, nqs)]
+    return [_materialize_refinement(out, n_chunks, ev)
+            for (out, n_chunks), ev in zip(launched, event_streams)]
+
+
 def run_refinement(events: EventStream, set_sizes: np.ndarray, nq: int,
                    total_slots: int, k: int, alpha: float,
                    chunk_size: int = 256,
                    ub_mode: str = "sound") -> RefinementResult:
-    out, n_chunks = _dispatch_refinement(events, set_sizes, nq, total_slots,
-                                         k, alpha, chunk_size, ub_mode)
-    return _materialize_refinement(out, n_chunks, events)
+    """Single-stream refinement (compatibility wrapper)."""
+    return run_refinement_many([events], [nq], set_sizes, total_slots, k,
+                               alpha, chunk_size, ub_mode)[0]
 
 
 def run_refinement_batch(event_streams, queries, set_sizes: np.ndarray,
                          total_slots: int, k: int, alpha: float,
                          chunk_size: int = 256,
                          ub_mode: str = "sound") -> "list[RefinementResult]":
-    """Per-query refinement for B queries with pipelined dispatch.
-
-    Each query runs the exact single-query scan (same jit, same operands —
-    results are bit-identical to B ``run_refinement`` calls), but all B
-    scans are dispatched before any result is materialized, overlapping
-    XLA execution with the host-side padding/dispatch of later queries.
-    """
-    launched = [_dispatch_refinement(ev, set_sizes, len(q), total_slots, k,
-                                     alpha, chunk_size, ub_mode)
-                for ev, q in zip(event_streams, queries)]
-    return [_materialize_refinement(out, n_chunks, ev)
-            for (out, n_chunks), ev in zip(launched, event_streams)]
+    """B-query refinement (compatibility wrapper over
+    :func:`run_refinement_many`)."""
+    return run_refinement_many(event_streams, [len(q) for q in queries],
+                               set_sizes, total_slots, k, alpha, chunk_size,
+                               ub_mode)

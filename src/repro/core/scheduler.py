@@ -1,0 +1,300 @@
+"""Partition-scheduled KOIOS execution engine (paper §VI scale-out).
+
+Every search request — single query, request batch, partitioned repository,
+or all three — is one :class:`ExecutionPlan`: a set of (query x partition)
+*tiles* driven through one shared pipeline.  The scheduler replaces the
+historical trio of hand-rolled loops (per-query search, per-partition host
+loop, per-partition batched search) with a single code path:
+
+  overlap (default)
+      All tiles' refinement scans are dispatched before any is
+      materialized (JAX dispatch is async: partition p+1's scan executes
+      on-device while the host expands events for and materializes
+      earlier tiles, with no host round-trip between partitions — the
+      sequential loop instead stalls every partition's refinement behind
+      the previous partition's full post-processing), every tile's
+      verification requests drain through ONE cross-partition/cross-query
+      :class:`VerifierPool` queue (fewer, fuller solver calls), and
+      theta_lb feedback is *bidirectional*: a bound raised by any tile's
+      verification round immediately re-prunes still-queued candidates of
+      every other tile of the same query — including tiles of *earlier*
+      partitions, which the sequential running-max loop could never reach.
+      On a device mesh the per-round bound exchange is an all-reduce-max
+      over the (pod, data) axes (``bound_exchange`` hook; see
+      ``repro.runtime.sharding.all_reduce_max`` and DESIGN.md §5).
+
+  sequential
+      The pre-scheduler reference trajectory: partitions run one after the
+      other, later partitions inheriting the running max of earlier
+      partitions' final k-th scores.  Kept (cheaply — it is the same tile
+      machinery with a different drive order) as the bit-identical
+      baseline for tests and the A/B arm of
+      ``benchmarks/response_time.py --partitions N --overlap``.
+
+Both schedules return exact top-k results; tests assert they are
+bit-identical on every (partitions x batch x verifier) combination.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from .postprocess import PostprocessState, VerifierPool, drive_states
+from .refinement import _dispatch_refinement, _materialize_refinement
+from .token_stream import build_token_stream_batch, expand_to_events
+from .types import (SearchParams, SearchResult, SearchStats, SetCollection)
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    """Instrumentation of one plan execution (the overlap story)."""
+
+    tiles: int = 0                 # (query x partition) tiles executed
+    rounds: int = 0                # lock-step verification rounds
+    fused_requests: int = 0        # verify requests fused across tiles
+    bound_raises: int = 0          # tile thetas raised by another tile
+    backward_raises: int = 0       # ... where the source is a LATER partition
+    theta_trace: List[np.ndarray] = dataclasses.field(default_factory=list)
+    # per-query theta_lb after each round (monotone non-decreasing rows)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["theta_trace"] = [t.tolist() for t in self.theta_trace]
+        return d
+
+
+@dataclasses.dataclass
+class _Tile:
+    """One (query, partition) unit of work."""
+
+    qi: int                        # query index within the plan
+    pi: int                        # partition index within the plan
+    index: "object"                # KoiosIndex of the partition
+    id_base: int                   # added to candidate ids in pool requests
+    events: Optional[object] = None
+    launched: Optional[tuple] = None      # async refinement handle
+    ref: Optional[object] = None
+    state: Optional[PostprocessState] = None
+    result: Optional[SearchResult] = None
+
+
+def _empty_result() -> SearchResult:
+    return SearchResult(
+        ids=np.zeros(0, np.int32), lb=np.zeros(0, np.float32),
+        ub=np.zeros(0, np.float32), stats=SearchStats())
+
+
+class ExecutionPlan:
+    """A request batch decomposed into (query x partition) tiles.
+
+    ``pool_coll`` is the collection the shared verifier resolves candidate
+    ids against; ``request_id_bases[pi]`` translates partition-local ids
+    into that collection's id space (the partition's global offset when
+    ``pool_coll`` is the full repository, 0 when it is the partition
+    itself).
+    """
+
+    def __init__(self, indexes: Sequence, queries: Sequence[np.ndarray],
+                 pool_coll: SetCollection,
+                 theta0: Optional[Sequence[float]] = None,
+                 request_id_bases: Optional[Sequence[int]] = None):
+        self.indexes = list(indexes)
+        self.queries = [np.asarray(q, dtype=np.int32) for q in queries]
+        self.pool_coll = pool_coll
+        self.theta0 = np.asarray(
+            theta0 if theta0 is not None else [0.0] * len(self.queries),
+            np.float64)
+        bases = (request_id_bases if request_id_bases is not None
+                 else [ix.id_offset for ix in self.indexes])
+        self.tiles = [
+            _Tile(qi=qi, pi=pi, index=index, id_base=int(bases[pi]))
+            for pi, index in enumerate(self.indexes)
+            for qi in range(len(self.queries))]
+        self.stats = SchedulerStats(tiles=len(self.tiles))
+
+    # ------------------------------------------------------------- helpers
+    def results(self) -> List[List[SearchResult]]:
+        """Per-query, per-partition (partition-ascending) local results."""
+        out: List[List[SearchResult]] = [[] for _ in self.queries]
+        for t in sorted(self.tiles, key=lambda t: (t.qi, t.pi)):
+            out[t.qi].append(t.result)
+        return out
+
+
+def _launch_tile(tile: _Tile, stream, query, params: SearchParams) -> None:
+    """Expand the (partition-independent) stream through the tile's
+    inverted index and dispatch its refinement scan asynchronously."""
+    coll = tile.index.coll
+    events = expand_to_events(stream, tile.index.inv)
+    if len(events) == 0:
+        tile.result = _empty_result()
+        return
+    tile.events = events
+    tile.launched = _dispatch_refinement(
+        events, coll.set_sizes, len(query), coll.total_tokens,
+        params.k, params.alpha, params.chunk_size, params.ub_mode)
+
+
+def _materialize_tile(tile: _Tile) -> None:
+    out, n_chunks = tile.launched
+    tile.launched = None
+    tile.ref = _materialize_refinement(out, n_chunks, tile.events)
+    tile.events = None          # free the expanded postings (P x B tiles)
+
+
+def _make_state(tile: _Tile, query, theta0: float,
+                params: SearchParams) -> None:
+    ref = tile.ref
+    ref.theta_lb = max(ref.theta_lb, float(theta0))
+    surv = (ref.seen & ref.alive).nonzero()[0]
+    tile.state = PostprocessState(
+        query, surv, ref.S[surv], ref.ub[surv], ref.theta_lb, params,
+        ref.stats, id_base=tile.id_base)
+    tile.ref = None             # survivors are copied into the state
+
+
+def _finish_tile(tile: _Tile, id_offset: int) -> None:
+    r = tile.state.result()
+    tile.result = SearchResult(
+        ids=(r.ids + id_offset).astype(np.int32),
+        lb=r.lb, ub=r.ub, stats=r.stats)
+
+
+def run_plan(plan: ExecutionPlan, sim_provider, params: SearchParams,
+             schedule: str = "overlap",
+             bound_exchange: Optional[Callable] = None
+             ) -> List[List[SearchResult]]:
+    """Drive every tile of ``plan`` to completion; returns per-query lists
+    of per-partition results (partition order), ids already globalized."""
+    if schedule == "overlap":
+        _run_overlapped(plan, sim_provider, params, bound_exchange)
+    elif schedule == "sequential":
+        _run_sequential(plan, sim_provider, params, bound_exchange)
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
+    return plan.results()
+
+
+# --------------------------------------------------------------- sequential
+def _run_sequential(plan: ExecutionPlan, sim, params: SearchParams,
+                    bound_exchange: Optional[Callable] = None) -> None:
+    """Partitions one after the other, sharing the running max of final
+    k-th scores — the paper's host reference loop (and the historical
+    ``search``/``search_batch`` trajectory, bit for bit).  The bound
+    exchange (when configured) runs once per completed partition, at the
+    loop's single inter-partition communication point."""
+    streams = build_token_stream_batch(plan.queries, sim, params.alpha)
+    pool = VerifierPool(plan.pool_coll, sim, params)
+    theta = plan.theta0.copy()
+    for pi in range(len(plan.indexes)):
+        tiles = [t for t in plan.tiles if t.pi == pi]
+        # pipelined refinement dispatch across the batch (one partition)
+        for t in tiles:
+            _launch_tile(t, streams[t.qi], plan.queries[t.qi], params)
+        live = [t for t in tiles if t.result is None]
+        for t in live:
+            _materialize_tile(t)
+            _make_state(t, plan.queries[t.qi], theta[t.qi], params)
+        drive_states(pool, [t.state for t in live],
+                     round_hook=lambda n: _count_round(plan, n))
+        for t in live:
+            _finish_tile(t, t.index.id_offset)
+        for t in tiles:
+            if len(t.result.lb) >= params.k:
+                theta[t.qi] = max(theta[t.qi],
+                                  float(t.result.lb[params.k - 1]))
+        if pi < len(plan.indexes) - 1:      # no consumer after the last
+            theta = _exchange(theta, bound_exchange)
+
+
+# ------------------------------------------------------------------ overlap
+def _run_overlapped(plan: ExecutionPlan, sim, params: SearchParams,
+                    bound_exchange: Optional[Callable]) -> None:
+    """All tiles in flight at once: pipelined refinement dispatch across
+    partitions, one global verification queue, bidirectional bounds."""
+    streams = build_token_stream_batch(plan.queries, sim, params.alpha)
+    # Dispatch EVERY tile's refinement before materializing any: the
+    # device works through later partitions' scans back-to-back while the
+    # host expands and materializes earlier tiles (the sequential loop
+    # instead parks each partition's refinement behind the previous
+    # partition's full post-processing).
+    for t in plan.tiles:
+        _launch_tile(t, streams[t.qi], plan.queries[t.qi], params)
+    live = [t for t in plan.tiles if t.result is None]
+    for t in live:
+        _materialize_tile(t)
+
+    # Initial bound exchange: every tile starts from the best refinement
+    # bound of ANY of its query's tiles (each partition's k-th greedy score
+    # lower-bounds the global k-th SO), not just its own.
+    theta = plan.theta0.copy()
+    _exchange_bounds(plan, live, theta, bound_exchange,
+                     tile_theta=lambda t: t.ref.theta_lb,
+                     raisable=lambda t: True)
+    for t in live:
+        _make_state(t, plan.queries[t.qi], theta[t.qi], params)
+
+    pool = VerifierPool(plan.pool_coll, sim, params)
+    drive_states(pool, [t.state for t in live],
+                 round_hook=lambda n: _feedback_round(plan, live, theta,
+                                                      bound_exchange, n))
+    for t in live:
+        _finish_tile(t, t.index.id_offset)
+
+
+def _count_round(plan: ExecutionPlan, n_active: int) -> None:
+    plan.stats.rounds += 1
+    plan.stats.fused_requests += n_active
+
+
+def _feedback_round(plan: ExecutionPlan, tiles, theta: np.ndarray,
+                    bound_exchange: Optional[Callable],
+                    n_active: int) -> None:
+    """After each lock-step verification round: gather every tile's bound,
+    all-reduce across tiles (and the mesh, when configured), and push the
+    result back into every still-running tile — including tiles of earlier
+    partitions, whose queued candidates are re-pruned on their next step."""
+    _count_round(plan, n_active)
+    _exchange_bounds(plan, tiles, theta, bound_exchange,
+                     tile_theta=lambda t: t.state.theta_lb,
+                     raisable=lambda t: not t.state.finished())
+    for t in tiles:
+        if not t.state.finished():
+            t.state.raise_theta(theta[t.qi])    # no-op unless higher
+
+
+def _exchange_bounds(plan: ExecutionPlan, tiles, theta: np.ndarray,
+                     bound_exchange: Optional[Callable],
+                     tile_theta: Callable, raisable: Callable) -> None:
+    """One exchange point: fold every tile's bound into the per-query
+    ``theta`` vector (in place), all-reduce it, and account raises —
+    ``bound_raises`` for each raisable tile whose own bound is below the
+    exchanged one, ``backward_raises`` when the improving tile sits in a
+    LATER partition than the raised one.  Both overlap exchange points
+    (refinement-time and per verification round) share this accounting."""
+    source_pi = {}
+    for t in tiles:
+        v = tile_theta(t)
+        if v > theta[t.qi]:
+            theta[t.qi] = v
+            source_pi[t.qi] = t.pi
+    new_theta = _exchange(theta, bound_exchange)
+    for t in tiles:
+        if raisable(t) and new_theta[t.qi] > tile_theta(t):
+            plan.stats.bound_raises += 1
+            if source_pi.get(t.qi, t.pi) > t.pi:
+                plan.stats.backward_raises += 1
+    theta[:] = new_theta
+    plan.stats.theta_trace.append(theta.copy())
+
+
+def _exchange(theta: np.ndarray,
+              bound_exchange: Optional[Callable]) -> np.ndarray:
+    if bound_exchange is None:
+        return theta
+    # max with the local bounds: the exchange may narrow dtypes (rounding
+    # toward -inf to stay certified), and theta must never decrease
+    return np.maximum(theta,
+                      np.asarray(bound_exchange(theta), np.float64))

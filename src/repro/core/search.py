@@ -1,36 +1,32 @@
 """KoiosSearch — end-to-end top-k semantic overlap search (paper Fig. 2).
 
-Single-partition pipeline:
-    token stream (blocked sim matmul)  ->  event expansion (inverted index)
-    ->  refinement (chunked vectorized filters)  ->  post-processing
-    (No-EM + batched verification w/ Lemma-8 early termination).
+Pipeline per (query x partition) tile:
+    token stream (blocked sim matmul, one stacked sweep per request batch)
+    ->  event expansion (inverted index)  ->  refinement (chunked
+    vectorized filters)  ->  post-processing (No-EM + batched verification
+    w/ Lemma-8 early termination).
 
-Multi-query serving: ``KoiosSearch.search_batch`` fuses B queries through
-the same pipeline — one stacked similarity sweep per partition and a shared
-cross-query verification queue (``run_postprocess_batch``) — returning
-results bit-identical to per-query ``search``.
-
-Partitioned scale-out (paper §VI last paragraph): the repository is split
-into contiguous shards; every shard runs refinement + post-processing with
-a *shared* theta_lb (the max over shards — on a device mesh this is an
-all-reduce-max, see ``repro.launch.serve`` / ``repro.runtime.sharding``),
-and the per-shard top-k lists are merged.  This module provides the
-host-level reference implementation (exactly the paper's semantics); the
-mesh-parallel execution path reuses the same per-shard functions.
+All execution — single query, request batch, partitioned repository — is
+one :class:`repro.core.scheduler.ExecutionPlan` driven by the partition
+scheduler: ``search`` IS ``search_batch`` with B=1 IS the scheduler with
+P=1.  The default ``overlap`` schedule runs every tile concurrently (async
+refinement dispatch, one global cross-partition/cross-query verification
+queue, bidirectional theta_lb feedback); ``sequential`` replays the
+paper's host loop over partitions with the running-max shared bound —
+both return bit-identical exact results (asserted in
+tests/test_scheduler.py).  On a device mesh the per-round bound exchange
+is an all-reduce-max over the (pod, data) axes (``bound_exchange``; see
+``repro.runtime.sharding.all_reduce_max`` and DESIGN.md §5).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from .inverted_index import InvertedIndex
-from .postprocess import (PostprocessState, run_postprocess,
-                          run_postprocess_batch)
-from .refinement import run_refinement, run_refinement_batch
-from .token_stream import (build_token_stream, build_token_stream_batch,
-                           expand_to_events)
+from .scheduler import ExecutionPlan, SchedulerStats, run_plan
 from .types import SearchParams, SearchResult, SearchStats, SetCollection
 
 
@@ -51,77 +47,24 @@ class KoiosIndex:
 def search_partition(index: KoiosIndex, query: np.ndarray, sim_provider,
                      params: SearchParams,
                      theta_lb0: float = 0.0) -> SearchResult:
-    """Run KOIOS on one partition; ``theta_lb0`` is the shared global bound."""
-    coll = index.coll
-    query = np.asarray(query, dtype=np.int32)
-    stream = build_token_stream(query, sim_provider, params.alpha)
-    events = expand_to_events(stream, index.inv)
-
-    if len(events) == 0:
-        return _empty_result()
-
-    ref = run_refinement(
-        events, coll.set_sizes, len(query), coll.total_tokens,
-        params.k, params.alpha, params.chunk_size, params.ub_mode)
-    ref.theta_lb = max(ref.theta_lb, theta_lb0)
-
-    surv = (ref.seen & ref.alive).nonzero()[0]
-    result = run_postprocess(
-        coll, query, sim_provider, surv, ref.S[surv], ref.ub[surv],
-        ref.theta_lb, params, ref.stats)
-    return SearchResult(
-        ids=(result.ids + index.id_offset).astype(np.int32),
-        lb=result.lb, ub=result.ub, stats=result.stats)
-
-
-def _empty_result() -> SearchResult:
-    return SearchResult(
-        ids=np.zeros(0, np.int32), lb=np.zeros(0, np.float32),
-        ub=np.zeros(0, np.float32), stats=SearchStats())
+    """One query against one partition (compatibility wrapper: a 1x1
+    plan); ``theta_lb0`` is the shared global bound."""
+    return search_partition_batch(index, [query], sim_provider, params,
+                                  [theta_lb0])[0]
 
 
 def search_partition_batch(index: KoiosIndex, queries: Sequence[np.ndarray],
                            sim_provider, params: SearchParams,
                            theta_lb0s: Sequence[float]
                            ) -> "list[SearchResult]":
-    """Batched :func:`search_partition`: B queries against one partition.
-
-    The token stream is built for all queries with one blocked sweep,
-    refinement runs per query (reusing one jit cache), and post-processing
-    advances all queries in lock step over a shared verification queue.
-    Per-query results are bit-identical to B :func:`search_partition` calls.
-    """
-    coll = index.coll
-    queries = [np.asarray(q, dtype=np.int32) for q in queries]
-    streams = build_token_stream_batch(queries, sim_provider, params.alpha)
-    results: "list[Optional[SearchResult]]" = [None] * len(queries)
-    live_pos, live_queries, live_events = [], [], []
-    for i, (query, stream) in enumerate(zip(queries, streams)):
-        events = expand_to_events(stream, index.inv)
-        if len(events) == 0:
-            results[i] = _empty_result()
-            continue
-        live_pos.append(i)
-        live_queries.append(query)
-        live_events.append(events)
-    refs = run_refinement_batch(
-        live_events, live_queries, coll.set_sizes, coll.total_tokens,
-        params.k, params.alpha, params.chunk_size, params.ub_mode)
-    states, state_pos = [], []
-    for i, query, ref in zip(live_pos, live_queries, refs):
-        ref.theta_lb = max(ref.theta_lb, float(theta_lb0s[i]))
-        surv = (ref.seen & ref.alive).nonzero()[0]
-        states.append(PostprocessState(
-            query, surv, ref.S[surv], ref.ub[surv], ref.theta_lb, params,
-            ref.stats))
-        state_pos.append(i)
-    for i, r in zip(state_pos,
-                    run_postprocess_batch(coll, sim_provider, states,
-                                          params)):
-        results[i] = SearchResult(
-            ids=(r.ids + index.id_offset).astype(np.int32),
-            lb=r.lb, ub=r.ub, stats=r.stats)
-    return results
+    """B queries against one partition (compatibility wrapper: a Bx1 plan
+    on the sequential drive — with a single partition the schedules
+    coincide).  Per-query results are bit-identical to B
+    :func:`search_partition` calls."""
+    plan = ExecutionPlan([index], queries, pool_coll=index.coll,
+                         theta0=theta_lb0s, request_id_bases=[0])
+    return [rs[0] for rs in
+            run_plan(plan, sim_provider, params, schedule="sequential")]
 
 
 def merge_topk(results: Sequence[SearchResult], k: int) -> SearchResult:
@@ -140,13 +83,26 @@ def merge_topk(results: Sequence[SearchResult], k: int) -> SearchResult:
 
 
 class KoiosSearch:
-    """Public search API over a (possibly partitioned) repository."""
+    """Public search API over a (possibly partitioned) repository.
+
+    ``schedule`` selects the default drive order of the partition
+    scheduler ('overlap' or 'sequential'); both are exact and
+    bit-identical.  ``bound_exchange`` optionally plugs a mesh
+    all-reduce-max into the per-round theta_lb exchange (see
+    ``repro.runtime.sharding.all_reduce_max``).  ``scheduler_stats`` holds
+    the :class:`SchedulerStats` of the most recent call.
+    """
 
     def __init__(self, coll: SetCollection, sim_provider,
                  params: Optional[SearchParams] = None,
-                 partitions: int = 1):
+                 partitions: int = 1, schedule: str = "overlap",
+                 bound_exchange: Optional[Callable] = None):
         self.params = params or SearchParams()
         self.sim = sim_provider
+        self.coll = coll
+        self.schedule = schedule
+        self.bound_exchange = bound_exchange
+        self.scheduler_stats: Optional[SchedulerStats] = None
         self.partitions = []
         n = coll.num_sets
         bounds = np.linspace(0, n, partitions + 1).astype(int)
@@ -156,44 +112,31 @@ class KoiosSearch:
                     KoiosIndex.build(coll.slice_sets(int(lo), int(hi)),
                                      id_offset=int(lo)))
 
-    def search(self, query: np.ndarray, k: Optional[int] = None) -> SearchResult:
-        params = self.params if k is None else dataclasses.replace(
-            self.params, k=k)
-        theta_lb = 0.0
-        results = []
-        # Sequential host loop over partitions sharing theta_lb (the mesh
-        # execution path runs these concurrently with an all-reduce-max;
-        # sharing the running max here mirrors the paper's shared bound).
-        for part in self.partitions:
-            r = search_partition(part, query, self.sim, params, theta_lb)
-            results.append(r)
-            if len(r.lb) >= params.k:
-                theta_lb = max(theta_lb, float(r.lb[params.k - 1]))
-        return merge_topk(results, params.k)
+    def search(self, query: np.ndarray, k: Optional[int] = None,
+               schedule: Optional[str] = None) -> SearchResult:
+        """Single-query search == ``search_batch`` with B=1."""
+        return self.search_batch([query], k=k, schedule=schedule)[0]
 
     def search_batch(self, queries: Sequence[np.ndarray],
-                     k: Optional[int] = None) -> "list[SearchResult]":
-        """Batched multi-query search — one fused pipeline for B queries.
+                     k: Optional[int] = None,
+                     schedule: Optional[str] = None
+                     ) -> "list[SearchResult]":
+        """Search B queries — one execution plan, every (query x
+        partition) tile through the shared pipeline.
 
-        Semantically equivalent to ``[self.search(q) for q in queries]``
-        (bit-identical ids/lb/ub) but executes the similarity sweep and all
-        verification batches across queries together: one blocked
-        (sum |Q_b| x |V|) matmul per vocab block and a shared cross-query
-        verification queue per partition (see ``core.postprocess``).
+        Results are exact and independent of the schedule and of the
+        batch composition: ``search_batch(qs)[i]`` is bit-identical to
+        ``search(qs[i])`` (same ids, same lb/ub floats — and on the
+        default schedule the same per-phase statistics).
         """
         params = self.params if k is None else dataclasses.replace(
             self.params, k=k)
         queries = [np.asarray(q, dtype=np.int32) for q in queries]
-        theta_lb = [0.0] * len(queries)
-        per_query: "list[list[SearchResult]]" = [[] for _ in queries]
-        # Partitions stay sequential, sharing each query's running theta_lb
-        # exactly as in `search` (the mesh path all-reduces this bound).
-        for part in self.partitions:
-            results = search_partition_batch(part, queries, self.sim,
-                                             params, theta_lb)
-            for i, r in enumerate(results):
-                per_query[i].append(r)
-                if len(r.lb) >= params.k:
-                    theta_lb[i] = max(theta_lb[i],
-                                      float(r.lb[params.k - 1]))
+        if not queries:
+            return []
+        plan = ExecutionPlan(self.partitions, queries, pool_coll=self.coll)
+        per_query = run_plan(plan, self.sim, params,
+                             schedule=schedule or self.schedule,
+                             bound_exchange=self.bound_exchange)
+        self.scheduler_stats = plan.stats
         return [merge_topk(rs, params.k) for rs in per_query]

@@ -19,6 +19,12 @@ Multi-query serving: :func:`build_token_stream_batch` stacks B queries into
 one (sum |Q_b| x |V|) blocked sweep — one provider dispatch and one host
 compaction per vocab block for the whole batch — and returns per-query
 streams bit-identical to B single-query calls.
+
+A stream depends only on (query, provider, alpha) — NOT on the partition —
+so the partition scheduler (``repro.core.scheduler``) builds each query's
+stream once and expands it through every partition's inverted index,
+replacing the historical per-partition rebuild with P calls to
+:func:`expand_to_events` per query.
 """
 from __future__ import annotations
 

@@ -32,3 +32,14 @@ def make_mesh(shape, axes):
 def single_device_mesh():
     """(1, 1) mesh for smoke/CPU runs — same code path as production."""
     return make_mesh((1, 1), ("data", "model"))
+
+
+def bound_exchange_mesh(max_shards: int | None = None):
+    """("data",)-axis mesh for the search scheduler's theta_lb exchange
+    (all-reduce-max over repository shards, DESIGN.md §5).  Sized to the
+    available devices (capped at ``max_shards``) so the same call serves
+    the production data axis and the single-device smoke run."""
+    n = len(jax.devices())
+    if max_shards is not None:
+        n = min(n, max_shards)
+    return make_mesh((n,), ("data",))

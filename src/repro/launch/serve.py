@@ -1,16 +1,15 @@
 """Serving driver: batched KOIOS search requests over a sharded corpus.
 
 This is the paper's system as a service: the repository is sharded over the
-(pod, data) mesh axes (paper §VI scale-out); each shard runs
-refinement + post-processing with the *global* theta_lb (the all-reduce-max
-of per-shard bounds — on the host reference path this is the running max),
-and per-shard top-k lists are merged.  The embedding tower is any of the
-assigned architectures (or the frozen-table provider standing in for
-FastText).
-
-Request batches run through the fused multi-query pipeline
-(``KoiosSearch.search_batch``) by default; ``--per-query`` serves each
-query independently (same results, the paper-style baseline).
+(pod, data) mesh axes (paper §VI scale-out) and every request batch is one
+``ExecutionPlan`` — (query x partition) tiles driven by the partition
+scheduler with cross-partition pipelined refinement dispatch, one global
+verification queue, and bidirectional theta_lb feedback.  With ``--mesh-bounds`` the
+per-round bound exchange runs as a real all-reduce-max over the mesh's
+data axis (``repro.runtime.sharding.all_reduce_max``); otherwise the host
+reference exchange (a plain max over tiles) is used — same numbers,
+DESIGN.md §5.  ``--sequential`` serves with the pre-scheduler partition
+loop (the A/B baseline; bit-identical results).
 
 Smoke scale:
     PYTHONPATH=src python -m repro.launch.serve --requests 4 --k 5
@@ -31,15 +30,18 @@ from ..data import (EmbeddingTableProvider, dataset_preset, make_embeddings,
 class SearchServer:
     """Batched request loop over a partitioned KOIOS engine.
 
-    ``serve_batch`` runs the whole request batch through the fused
-    multi-query pipeline (``KoiosSearch.search_batch``) by default: one
-    stacked similarity sweep and a shared cross-query verification queue
-    per partition.  ``batched=False`` falls back to the per-query loop
-    (identical results — the A/B baseline of
-    ``benchmarks/response_time.py``)."""
+    ``serve_batch`` runs the whole request batch through one execution
+    plan: a stacked similarity sweep shared by every partition, async
+    refinement dispatch across (query x partition) tiles, and a shared
+    cross-query/cross-partition verification queue.  ``batched=False``
+    falls back to per-query plans (identical results — the A/B baseline
+    of ``benchmarks/response_time.py``)."""
 
-    def __init__(self, coll, sim, params: SearchParams, partitions: int):
-        self.engine = KoiosSearch(coll, sim, params, partitions=partitions)
+    def __init__(self, coll, sim, params: SearchParams, partitions: int,
+                 schedule: str = "overlap", bound_exchange=None):
+        self.engine = KoiosSearch(coll, sim, params, partitions=partitions,
+                                  schedule=schedule,
+                                  bound_exchange=bound_exchange)
 
     def serve_batch(self, queries, batched: bool = True):
         """One batched request: list of query sets -> list of results."""
@@ -76,16 +78,33 @@ def main(argv=None):
     ap.add_argument("--per-query", action="store_true",
                     help="serve each query independently (A/B baseline for "
                          "the default fused multi-query path)")
+    ap.add_argument("--sequential", action="store_true",
+                    help="drive partitions with the sequential running-max "
+                         "loop instead of the overlapped scheduler "
+                         "(bit-identical results; A/B baseline)")
+    ap.add_argument("--mesh-bounds", action="store_true",
+                    help="run the theta_lb exchange as an all-reduce-max "
+                         "over a device mesh (DESIGN.md §5)")
     args = ap.parse_args(argv)
+
+    bound_exchange = None
+    if args.mesh_bounds:
+        from ..runtime.sharding import bound_exchange_for
+        from .mesh import bound_exchange_mesh
+        bound_exchange = bound_exchange_for(bound_exchange_mesh())
 
     print(f"[serve] building corpus ({args.dataset} @ {args.scale})")
     coll = dataset_preset(args.dataset, scale=args.scale, seed=0)
     emb = make_embeddings(coll.vocab_size, dim=args.dim, seed=0)
     sim = EmbeddingTableProvider(emb)
     params = SearchParams(k=args.k, alpha=args.alpha)
-    server = SearchServer(coll, sim, params, args.partitions)
+    server = SearchServer(coll, sim, params, args.partitions,
+                          schedule="sequential" if args.sequential
+                          else "overlap",
+                          bound_exchange=bound_exchange)
     print(f"[serve] corpus: {coll.num_sets} sets, vocab {coll.vocab_size}, "
-          f"{args.partitions} partitions")
+          f"{args.partitions} partitions, "
+          f"schedule={'sequential' if args.sequential else 'overlap'}")
 
     queries = sample_queries(coll, args.requests, seed=1)
     for lo in range(0, len(queries), args.batch_size):
@@ -96,6 +115,14 @@ def main(argv=None):
                   f"scores={[round(s,2) for s in r['scores'][:5]]} "
                   f"lat={r['latency_s']}s "
                   f"verified={r['stats']['exact_matches']}")
+        st = server.engine.scheduler_stats
+        if st is not None and not args.per_query:
+            # per-query mode runs one plan per query; engine stats hold
+            # only the last plan, so the batch-level line would mislead
+            print(f"  [scheduler] tiles={st.tiles} rounds={st.rounds} "
+                  f"fused_requests={st.fused_requests} "
+                  f"bound_raises={st.bound_raises} "
+                  f"(backward={st.backward_raises})")
     return 0
 
 

@@ -27,9 +27,11 @@ None.  Activations/batch: batch dim over (pod, data); KV caches: batch over
 (pod, data), heads over model; ssm state heads over model."""
 from __future__ import annotations
 
+import functools
 from typing import Any, Sequence
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -238,3 +240,54 @@ def to_shardings(pspec_tree: Any, mesh: Mesh):
     return jax.tree_util.tree_map(
         lambda spec: NamedSharding(mesh, spec), pspec_tree,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------- bound exchange
+def _round_down_f32(values):
+    """float32 narrowing that never rounds UP: theta_lb is a certified
+    lower bound, and nearest-rounding a float64 bound up by half an ulp
+    would let the exchange prune a boundary candidate unsoundly.  One ulp
+    of looseness only ever keeps an extra candidate alive."""
+    v64 = np.asarray(values, np.float64)
+    v32 = v64.astype(np.float32)
+    return np.where(v32.astype(np.float64) > v64,
+                    np.nextafter(v32, np.float32(-np.inf)), v32)
+
+
+@functools.lru_cache(maxsize=None)
+def _amax_fn(mesh: Mesh, present: tuple):
+    from jax.experimental.shard_map import shard_map
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=P(), out_specs=P())
+    def _amax(v):
+        for a in present:
+            v = jax.lax.pmax(v, a)
+        return v
+
+    return _amax
+
+
+def all_reduce_max(values, mesh: Mesh, axes: Sequence[str] = ("pod", "data")):
+    """All-reduce-max of a replicated bound vector over the repository
+    shard axes (DESIGN.md §5).
+
+    The partition scheduler's theta_lb exchange: every shard contributes
+    its per-query lower bounds and receives the global max, so a bound
+    raised anywhere prunes candidates everywhere.  ``values`` is a (B,)
+    array (one slot per in-flight query), replicated across the mesh; axes
+    absent from the mesh are skipped, so the same call works on the
+    production (pod, data, model) mesh, the single-pod (data, model) mesh,
+    and the single-device smoke mesh.  The shard_map trace is cached per
+    (mesh, axes) — this runs once per verification round.  Returns a host
+    ndarray (float32, rounded toward -inf so the bound stays certified).
+    """
+    vals = _round_down_f32(values)
+    present = tuple(a for a in axes if a in mesh.axis_names)
+    if not present:
+        return vals
+    return np.asarray(_amax_fn(mesh, present)(jax.numpy.asarray(vals)))
+
+
+def bound_exchange_for(mesh: Mesh, axes: Sequence[str] = ("pod", "data")):
+    """A scheduler ``bound_exchange`` hook closing over ``mesh``."""
+    return lambda theta: all_reduce_max(theta, mesh, axes)

@@ -107,6 +107,43 @@ def test_auction_dual_always_upper_bound():
         assert float(lb) <= so + 1e-4
 
 
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 12), st.integers(1, 24))
+def test_auction_nq_bounded_exact_vs_hungarian(seed, nq, nc):
+    """Guards the nq-row auction (only logical |Q| rows bid; release-with-
+    price-zeroing phase transitions): brackets must contain the exact
+    Hungarian SO and be nq-tight — the bracket's eps-CS slack is one eps
+    per LOGICAL row, with no unassigned-price leftover."""
+    rng = np.random.default_rng(seed)
+    w = _random_weights(rng, nq, nc, 0.5)
+    N, M = max(nq, 4), max(nc, 4)          # padded shapes, like the pool's
+    wp = np.zeros((N, M), np.float32)
+    wp[:nq, :nc] = w
+    so, _ = hungarian_batch(jnp.asarray(wp)[None],
+                            jnp.asarray([nq], jnp.int32),
+                            jnp.asarray([nc], jnp.int32))
+    so = float(so[0])
+    res = auction_batch(jnp.asarray(wp)[None], jnp.asarray([nq], jnp.int32),
+                        jnp.asarray([nc], jnp.int32),
+                        make_eps_schedule(1e-4), jnp.float32(-1e30))
+    lb, ub = float(res.lb[0]), float(res.ub[0])
+    assert lb <= so + 1e-4 <= ub + 2e-4
+    assert ub - lb <= nq * 2e-4 + 1e-4     # nq-bounded slack, NOT max(N, M)
+
+
+def test_auction_rounds_bounded_by_logical_rows():
+    """The square-padding round cost is gone: a |Q|=1 verification against
+    a wide padded matrix converges in O(phases) rounds, not O(K)."""
+    rng = np.random.default_rng(9)
+    K = 64
+    w = np.zeros((1, K, K), np.float32)
+    w[0, 0] = np.where(rng.random(K) >= 0.5, rng.random(K), 0.0)
+    res = auction_batch(jnp.asarray(w), jnp.asarray([1], jnp.int32),
+                        jnp.asarray([K], jnp.int32),
+                        make_eps_schedule(1e-4), jnp.float32(-1e30))
+    assert int(res.rounds[0]) < K // 2     # historical form needed >= K
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 10_000), st.integers(1, 10), st.integers(1, 10))
 def test_auction_vs_scipy(seed, nq, nc):
