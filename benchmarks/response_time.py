@@ -16,10 +16,24 @@ bidirectional theta_lb feedback) against the sequential running-max
 partition loop, asserting bit-identical results:
 
     PYTHONPATH=src python -m benchmarks.response_time --partitions 4 --overlap
+
+Fused-wave A/B (``--fused``): times the on-device wave schedule (one
+device program per partition wave — refinement chunk scans + compaction +
+the first R verification rounds fused, DESIGN.md §3) against the
+host-driven overlap schedule, counting host<->device dispatches/transfers
+with ``repro.runtime.instrument`` and asserting bit-identical results:
+
+    PYTHONPATH=src python -m benchmarks.response_time --fused --partitions 4
+
+Every A/B invocation also writes ``BENCH_response_time.json`` (per-mode
+latencies + a hash of the results) so CI accumulates the perf trajectory
+as an artifact; ``--json ''`` disables.
 """
 from __future__ import annotations
 
 import argparse
+import hashlib
+import json
 
 import numpy as np
 
@@ -121,6 +135,7 @@ def run_ab(dataset="opendata", batch_size=8, k=10, alpha=0.8,
         "dataset": dataset, "batch_size": n, "verifier": verifier,
         "per_query_s": t_pq / n, "batched_s": t_b / n,
         "speedup": t_pq / t_b if t_b else float("inf"),
+        "result_hash": result_hash(r_b),
         "identical_topk": True,
     }
 
@@ -166,8 +181,84 @@ def run_partition_ab(dataset="opendata", partitions=4, batch_size=8, k=10,
         "speedup": t_seq / t_ovl if t_ovl else float("inf"),
         "bound_raises": st.bound_raises,
         "backward_raises": st.backward_raises,
+        "result_hash": result_hash(r_ovl),
         "identical_topk": True,
     }
+
+
+def result_hash(results) -> str:
+    """Stable digest of a list of SearchResults (ids + score bits)."""
+    h = hashlib.sha256()
+    for r in results:
+        h.update(np.ascontiguousarray(r.ids).tobytes())
+        h.update(np.ascontiguousarray(r.lb).tobytes())
+    return h.hexdigest()[:16]
+
+
+def run_fused_ab(dataset="opendata", partitions=4, batch_size=8, k=10,
+                 alpha=0.8, verifier="hungarian", repeats=7):
+    """Fused on-device wave schedule vs host-driven overlap at P partitions.
+
+    Both arms run the identical plan decomposition; the A/B isolates what
+    the wave program eliminates — per-tile refinement dispatch +
+    materialization and the first R rounds' pairwise/solver round-trips.
+    Host<->device dispatches and transfers are counted via
+    ``repro.runtime.instrument``; results are asserted bit-identical."""
+    import jax
+
+    from repro.core import KoiosSearch
+    from repro.runtime import instrument
+
+    fused_mode = "auto" if jax.default_backend() == "tpu" else "interpret"
+    params = SearchParams(k=k, alpha=alpha, verifier=verifier,
+                          fused=fused_mode)
+    coll, sim = world(dataset)
+    engine = KoiosSearch(coll, sim, params, partitions=partitions)
+    queries = sample_queries(coll, batch_size, seed=11)
+
+    def overlap():
+        return engine.search_batch(queries, schedule="overlap")
+
+    def fused():
+        return engine.search_batch(queries, schedule="fused")
+
+    r_ovl, _ = timed(overlap)        # warm both paths before timing
+    r_fus, _ = timed(fused)
+    assert engine.scheduler_stats.schedule == "fused", \
+        "fused schedule unavailable (provider or backend gate)"
+    for a, b in zip(r_ovl, r_fus):
+        assert np.array_equal(a.ids, b.ids) and np.array_equal(a.lb, b.lb), \
+            "fused wave schedule diverged from the overlap schedule"
+
+    counts = {}
+    for name, fn in (("overlap", overlap), ("fused", fused)):
+        with instrument.counting() as c:
+            fn()
+        counts[name] = instrument.totals(c)
+    t_ovl = min(timed(overlap)[1] for _ in range(repeats))
+    t_fus = min(timed(fused)[1] for _ in range(repeats))
+    n = len(queries)
+    st = engine.scheduler_stats
+    return {
+        "dataset": dataset, "partitions": partitions, "batch_size": n,
+        "verifier": verifier,
+        "overlap_s": t_ovl / n, "fused_s": t_fus / n,
+        "speedup": t_ovl / t_fus if t_fus else float("inf"),
+        "overlap_transfers": counts["overlap"]["total"],
+        "fused_transfers": counts["fused"]["total"],
+        "waves": st.waves, "device_rounds": st.device_rounds,
+        "result_hash": result_hash(r_fus),
+        "identical_topk": True,
+    }
+
+
+def write_bench_json(payload: dict, path: str) -> None:
+    """BENCH_response_time.json — the perf-trajectory artifact CI uploads."""
+    if not path:
+        return
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"[bench] wrote {path}")
 
 
 def main(argv=None):
@@ -180,6 +271,10 @@ def main(argv=None):
     mode.add_argument("--overlap", action="store_true",
                       help="A/B the overlapped partition scheduler vs the "
                            "sequential partition loop (use --partitions)")
+    mode.add_argument("--fused", action="store_true",
+                      help="A/B the fused on-device wave schedule vs the "
+                           "overlap schedule (use --partitions; interpret "
+                           "mode off-TPU)")
     ap.add_argument("--dataset", default=None,
                     help="restrict to one dataset (A/B default: opendata; "
                          "table mode default: all four)")
@@ -191,7 +286,40 @@ def main(argv=None):
     ap.add_argument("--verifier", default="hungarian",
                     choices=["hungarian", "auction", "hybrid"],
                     help="A/B modes only")
+    ap.add_argument("--json", default="BENCH_response_time.json",
+                    help="perf-artifact path for A/B modes ('' disables)")
     args = ap.parse_args(argv)
+
+    if args.fused:
+        r = run_fused_ab(args.dataset or "opendata", args.partitions,
+                         args.batch_size, k=args.k,
+                         verifier=args.verifier)
+        print("dataset,schedule,partitions,batch_size,"
+              "mean_latency_per_query_s,speedup_vs_overlap,"
+              "transfers,waves,device_rounds,result_hash,identical_topk")
+        for name, lat, sp, tr in (
+                ("fused", r["fused_s"], r["speedup"],
+                 r["fused_transfers"]),
+                ("overlap", r["overlap_s"], 1.0, r["overlap_transfers"])):
+            print(f"{r['dataset']},{name},{r['partitions']},"
+                  f"{r['batch_size']},{lat:.4f},{sp:.2f},{tr},"
+                  f"{r['waves']},{r['device_rounds']},"
+                  f"{r['result_hash']},{r['identical_topk']}")
+        write_bench_json({
+            "benchmark": "response_time", "mode": "fused_ab",
+            "modes": {
+                "fused": {"mean_latency_per_query_s": r["fused_s"],
+                          "transfers": r["fused_transfers"]},
+                "overlap": {"mean_latency_per_query_s": r["overlap_s"],
+                            "transfers": r["overlap_transfers"]},
+            },
+            "speedup": r["speedup"], "result_hash": r["result_hash"],
+            "dataset": r["dataset"], "partitions": r["partitions"],
+            "batch_size": r["batch_size"], "verifier": r["verifier"],
+        }, args.json)
+        assert r["fused_transfers"] < r["overlap_transfers"], \
+            "fused wave must reduce host<->device transfers"
+        return 0
 
     if args.overlap:
         r = run_partition_ab(args.dataset or "opendata", args.partitions,
@@ -206,6 +334,17 @@ def main(argv=None):
                   f"{r['batch_size']},{lat:.4f},{sp:.2f},"
                   f"{r['bound_raises']},{r['backward_raises']},"
                   f"{r['identical_topk']}")
+        write_bench_json({
+            "benchmark": "response_time", "mode": "partition_ab",
+            "modes": {
+                "overlap": {"mean_latency_per_query_s": r["overlap_s"]},
+                "sequential": {
+                    "mean_latency_per_query_s": r["sequential_s"]},
+            },
+            "speedup": r["speedup"], "result_hash": r["result_hash"],
+            "dataset": r["dataset"], "partitions": r["partitions"],
+            "batch_size": r["batch_size"], "verifier": r["verifier"],
+        }, args.json)
         return 0
 
     if args.batched or args.per_query:
@@ -220,6 +359,17 @@ def main(argv=None):
         for mode_name, lat, sp in rows:
             print(f"{r['dataset']},{mode_name},{r['batch_size']},"
                   f"{lat:.4f},{sp:.2f},{r['identical_topk']}")
+        write_bench_json({
+            "benchmark": "response_time", "mode": "batched_ab",
+            "modes": {
+                "batched": {"mean_latency_per_query_s": r["batched_s"]},
+                "per_query": {
+                    "mean_latency_per_query_s": r["per_query_s"]},
+            },
+            "speedup": r["speedup"], "result_hash": r["result_hash"],
+            "dataset": r["dataset"], "batch_size": r["batch_size"],
+            "verifier": r["verifier"],
+        }, args.json)
         return 0
 
     table_kw = {"k": args.k}

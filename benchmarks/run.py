@@ -65,6 +65,19 @@ def main(argv=None) -> None:
         print(f"{r['dataset']},{r['partitions']},{r['sequential_s']:.4f},"
               f"{r['overlap_s']:.4f},{r['speedup']:.2f},"
               f"{r['bound_raises']},{r['backward_raises']}")
+        _banner("Fused wave: on-device schedule vs host-driven overlap")
+        print("dataset,partitions,overlap_s,fused_s,speedup,"
+              "overlap_transfers,fused_transfers,result_hash")
+        rf = response_time.run_fused_ab(
+            partitions=4, batch_size=4 if args.fast else 8)
+        print(f"{rf['dataset']},{rf['partitions']},{rf['overlap_s']:.4f},"
+              f"{rf['fused_s']:.4f},{rf['speedup']:.2f},"
+              f"{rf['overlap_transfers']},{rf['fused_transfers']},"
+              f"{rf['result_hash']}")
+        response_time.write_bench_json({
+            "benchmark": "response_time", "mode": "suite",
+            "partition_ab": r, "fused_ab": rf,
+        }, "BENCH_response_time.json")
         if not args.fast:
             _banner("SilkMoth-mode (char n-gram similarity, §VIII-B)")
             for r in response_time.run(datasets=("opendata",),

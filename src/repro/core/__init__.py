@@ -12,8 +12,8 @@ from .inverted_index import InvertedIndex
 from .token_stream import (build_token_stream, build_token_stream_batch,
                            expand_to_events)
 from .scheduler import ExecutionPlan, SchedulerStats, run_plan
-from .search import (KoiosSearch, KoiosIndex, search_partition,
-                     search_partition_batch, merge_topk)
+from .search import (KoiosSearch, KoiosIndex, partition_ranges,
+                     search_partition, search_partition_batch, merge_topk)
 from .baseline import baseline_topk, baseline_plus_topk, brute_force_topk
 
 __all__ = [
@@ -21,7 +21,7 @@ __all__ = [
     "EmbeddingSimilarity", "NGramJaccardSimilarity", "InvertedIndex",
     "build_token_stream", "build_token_stream_batch", "expand_to_events",
     "ExecutionPlan", "SchedulerStats", "run_plan",
-    "KoiosSearch", "KoiosIndex", "search_partition",
+    "KoiosSearch", "KoiosIndex", "partition_ranges", "search_partition",
     "search_partition_batch", "merge_topk",
     "baseline_topk", "baseline_plus_topk", "brute_force_topk",
 ]

@@ -45,7 +45,8 @@ class AuctionResult:
     rounds: jnp.ndarray      # (B,) int32 bidding rounds executed
 
 
-def _auction_single(w, nq, nc, eps_schedule, theta_lb, max_rounds):
+def _auction_single(w, nq, nc, eps_schedule, theta_lb, max_rounds,
+                    use_kernel: bool = False):
     """One padded weight matrix (N, M); logical sizes (nq, nc) <= (N, M).
 
     The problem is embedded in the K x K zero-padded square matrix
@@ -151,11 +152,19 @@ def _auction_single(w, nq, nc, eps_schedule, theta_lb, max_rounds):
 
         def body(s):
             assign, prices, ub_best, early, r = s
-            profits = wm - prices[None, :]
-            w1 = jnp.max(profits, axis=1)
-            jstar = jnp.argmax(profits, axis=1).astype(jnp.int32)
-            second = jnp.where(cols[None, :] == jstar[:, None], _NEG, profits)
-            w2 = jnp.max(second, axis=1)
+            if use_kernel:
+                # fused subtract + per-row top-2 (kernels/auction_round.py):
+                # the (K, K) profit matrix never materializes in HBM.  Same
+                # first-index tie-breaking as the inline pass below.
+                from ...kernels import ops as _kops
+                w1, w2, jstar = _kops.auction_topk2(wm, prices)
+            else:
+                profits = wm - prices[None, :]
+                w1 = jnp.max(profits, axis=1)
+                jstar = jnp.argmax(profits, axis=1).astype(jnp.int32)
+                second = jnp.where(cols[None, :] == jstar[:, None], _NEG,
+                                   profits)
+                w2 = jnp.max(second, axis=1)
             bidding = (assign == -1) & row_valid
             bid_val = w1 + prices[jstar] - w2 + eps   # = w[i,j*] - w2 + eps
 
@@ -225,8 +234,9 @@ def make_eps_schedule(eps_min: float, eps_start: float = 0.25,
     return jnp.asarray(eps, dtype=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("max_rounds",))
-def auction_batch(w, nq, nc, eps_schedule, theta_lb, max_rounds: int = 5000):
+@functools.partial(jax.jit, static_argnames=("max_rounds", "use_kernel"))
+def auction_batch(w, nq, nc, eps_schedule, theta_lb, max_rounds: int = 5000,
+                  use_kernel: bool = False):
     """Batched verification.
 
     Args:
@@ -236,13 +246,18 @@ def auction_batch(w, nq, nc, eps_schedule, theta_lb, max_rounds: int = 5000):
       theta_lb: pruning threshold (Lemma 8) — scalar, or (B,) per-element
         when one batch carries several queries' verifications (the shared
         multi-query verify queue); use -inf to disable.
+      use_kernel: run each round's profit top-2 through the fused Pallas
+        kernel (``kernels/auction_round.py``) — the TPU serving/fused-wave
+        path; the default inline jnp pass is the same math (guarded by a
+        parity test) and faster under CPU interpret mode.
     Returns :class:`AuctionResult` of per-element score brackets.
     """
     theta = jnp.broadcast_to(
         jnp.asarray(theta_lb, jnp.float32), nq.shape)
     fn = jax.vmap(
         lambda wi, nqi, nci, ti: _auction_single(
-            wi, nqi, nci, eps_schedule, ti, max_rounds))
+            wi, nqi, nci, eps_schedule, ti, max_rounds,
+            use_kernel=use_kernel))
     lb, ub, assign, early, rounds = fn(w, nq, nc, theta)
     return AuctionResult(lb=lb, ub=ub, assign=assign,
                          early_stopped=early, rounds=rounds)

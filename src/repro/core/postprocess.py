@@ -39,6 +39,7 @@ import jax.numpy as jnp
 from .matching.auction import auction_batch, make_eps_schedule
 from .matching.hungarian import hungarian_batch
 from .types import SearchParams, SearchResult, SearchStats, SetCollection
+from ..runtime import instrument
 
 
 def _pad_pow2(n: int, lo: int = 8) -> int:
@@ -138,6 +139,8 @@ class VerifierPool:
         q_cat = np.concatenate([np.asarray(r.query, np.int32)
                                 for r in requests])
         c_cat = np.concatenate([t for ts in toks for t in ts])
+        instrument.record("h2d:pairwise_dispatch")
+        instrument.record("d2h:weights_materialize")
         s = np.asarray(self.sim.pairwise(q_cat, c_cat))
         s = np.where(s >= self.params.alpha, s, 0.0).astype(np.float32)
         out = []
@@ -194,6 +197,8 @@ class VerifierPool:
         """Exact SO per entry via shape-grouped ``hungarian_batch``."""
         out: List[Optional[np.ndarray]] = [None] * len(entries)
         for w, nqs, ncs, _thetas, spans in self._grouped(entries):
+            instrument.record("h2d:solver_dispatch")
+            instrument.record("d2h:solver_materialize")
             so, _ = hungarian_batch(jnp.asarray(w), jnp.asarray(nqs),
                                     jnp.asarray(ncs))
             so = np.asarray(so)
@@ -221,6 +226,8 @@ class VerifierPool:
 
         outcomes: List[Optional[VerifyOutcome]] = [None] * len(requests)
         for w, nqs, ncs, thetas, spans in self._grouped(entries):
+            instrument.record("h2d:solver_dispatch")
+            instrument.record("d2h:solver_materialize")
             res = auction_batch(jnp.asarray(w), jnp.asarray(nqs),
                                 jnp.asarray(ncs), self.eps_schedule,
                                 jnp.asarray(thetas))
@@ -313,6 +320,29 @@ class PostprocessState:
         self._pending: Optional[np.ndarray] = None
         self._cand: Optional[np.ndarray] = None
         self._order: Optional[np.ndarray] = None
+
+    @classmethod
+    def from_wave(cls, query: np.ndarray, surv_ids: np.ndarray,
+                  lb: np.ndarray, ub: np.ndarray, live: np.ndarray,
+                  verified: np.ndarray, em_early: int, em_full: int,
+                  theta_lb: float, params: SearchParams, stats: SearchStats,
+                  id_base: int = 0) -> "PostprocessState":
+        """Resume from the point a fused wave program left off.
+
+        The wave already ran the first R verification rounds on device
+        (DESIGN.md §3): ``live``/``verified`` are its masks over the
+        refinement survivors, ``lb``/``ub`` its tightened brackets, and
+        ``theta_lb`` the on-device-exchanged bound.  Every one of those is
+        a certified bound/mask (the wave only prunes on ``ub < theta`` and
+        only marks rows verified with sound brackets), so the host drive
+        loop continues exactly as if it had run those rounds itself."""
+        st = cls(query, surv_ids, lb, ub, float(theta_lb), params, stats,
+                 id_base=id_base)
+        st.live = np.asarray(live, bool).copy()
+        st.verified = np.asarray(verified, bool).copy()
+        st.em_early = int(em_early)
+        st.em_full = int(em_full)
+        return st
 
     def next_request(self) -> Optional[VerifyRequest]:
         k = self.params.k

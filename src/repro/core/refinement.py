@@ -35,6 +35,7 @@ from .filters import compute_iub, kth_largest, prune_mask
 from .inverted_index import InvertedIndex
 from .token_stream import EventStream, pad_events
 from .types import SearchStats
+from ..runtime import instrument
 
 
 @dataclasses.dataclass
@@ -47,69 +48,13 @@ class RefinementResult:
     stats: SearchStats
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("k", "num_sets", "q_words", "total_slots", "ub_mode"))
-def _run_refinement(ev_set, ev_q, ev_slot, ev_sim, cap, k: int,
-                    num_sets: int, q_words: int, total_slots: int,
-                    ub_mode: str, alpha):
-    """Scan all chunks.  ev_* are (n_chunks, chunk)."""
+def refine_carry_init(num_sets: int, q_words: int, total_slots: int):
+    """Zeroed refinement carry — the state threaded through every chunk.
 
-    def chunk_step(state, chunk):
-        S, l, T, d, seen, alive, qmatched, qseen, slot_matched, theta_lb = state
-        c_set, c_q, c_slot, c_sim = chunk
-        chunk_len = c_set.shape[0]
-
-        def ev_body(e, st):
-            (S, l, T, d, seen, qmatched, qseen, slot_matched) = st
-            C = c_set[e]
-            q = c_q[e]
-            slot = c_slot[e]
-            s = c_sim[e]
-            valid = C >= 0
-            Ci = jnp.maximum(C, 0)
-            do = valid & alive[Ci]
-            qw = q >> 5
-            qb = (q & 31).astype(jnp.uint32)
-            bit = jnp.uint32(1) << qb
-
-            # --- first-seen bookkeeping (sound iUB') ------------------------
-            qs_word = qseen[Ci, qw]
-            first = do & ((qs_word & bit) == 0)
-            T = T.at[Ci].add(jnp.where(first, s, 0.0))
-            d = d.at[Ci].add(first.astype(jnp.int32))
-            qseen = qseen.at[Ci, qw].set(
-                jnp.where(first, qs_word | bit, qs_word))
-            seen = seen.at[Ci].set(seen[Ci] | do)
-
-            # --- greedy admission (iLB, Lemma 5) ----------------------------
-            qm_word = qmatched[Ci, qw]
-            q_free = (qm_word & bit) == 0
-            t_free = ~slot_matched[slot]
-            adm = do & q_free & t_free
-            S = S.at[Ci].add(jnp.where(adm, s, 0.0))
-            l = l.at[Ci].add(adm.astype(jnp.int32))
-            qmatched = qmatched.at[Ci, qw].set(
-                jnp.where(adm, qm_word | bit, qm_word))
-            slot_matched = slot_matched.at[slot].set(
-                slot_matched[slot] | adm)
-            return (S, l, T, d, seen, qmatched, qseen, slot_matched)
-
-        (S, l, T, d, seen, qmatched, qseen, slot_matched) = jax.lax.fori_loop(
-            0, chunk_len, ev_body,
-            (S, l, T, d, seen, qmatched, qseen, slot_matched))
-
-        # --- vectorized filter pass (per chunk) -----------------------------
-        s_now = c_sim[-1]
-        theta_lb = jnp.maximum(theta_lb, kth_largest(S, k))
-        iub = compute_iub(S, l, T, d, cap, s_now, seen, ub_mode)
-        killed = prune_mask(iub, theta_lb, seen, alive)
-        alive = alive & ~killed
-        n_killed = jnp.sum(killed)
-        return (S, l, T, d, seen, alive, qmatched, qseen, slot_matched,
-                theta_lb), n_killed
-
-    state0 = (
+    Shared by the standalone scan below and the fused wave program
+    (``repro.core.wave``), which embeds the same (carry, chunk) -> carry
+    step inside one device program per partition wave (DESIGN.md §3)."""
+    return (
         jnp.zeros((num_sets,), jnp.float32),          # S
         jnp.zeros((num_sets,), jnp.int32),            # l
         jnp.zeros((num_sets,), jnp.float32),          # T
@@ -121,18 +66,95 @@ def _run_refinement(ev_set, ev_q, ev_slot, ev_sim, cap, k: int,
         jnp.zeros((total_slots,), bool),              # slot_matched
         jnp.float32(0.0),                             # theta_lb
     )
-    state, killed_per_chunk = jax.lax.scan(
-        chunk_step, state0, (ev_set, ev_q, ev_slot, ev_sim))
-    S, l, T, d, seen, alive, _, _, _, theta_lb = state
 
-    # --- stream exhausted: drop the s_now term (see module docstring) -------
+
+def refine_chunk_step(state, chunk, cap, k: int, ub_mode: str):
+    """One chunk of the refinement scan: sequential greedy admission over
+    the chunk's events, then one masked filter pass.  Returns
+    (carry, n_killed); suitable for ``lax.scan`` directly and for the
+    fused wave program's embedded scan."""
+    S, l, T, d, seen, alive, qmatched, qseen, slot_matched, theta_lb = state
+    c_set, c_q, c_slot, c_sim = chunk
+    chunk_len = c_set.shape[0]
+
+    def ev_body(e, st):
+        (S, l, T, d, seen, qmatched, qseen, slot_matched) = st
+        C = c_set[e]
+        q = c_q[e]
+        slot = c_slot[e]
+        s = c_sim[e]
+        valid = C >= 0
+        Ci = jnp.maximum(C, 0)
+        do = valid & alive[Ci]
+        qw = q >> 5
+        qb = (q & 31).astype(jnp.uint32)
+        bit = jnp.uint32(1) << qb
+
+        # --- first-seen bookkeeping (sound iUB') ------------------------
+        qs_word = qseen[Ci, qw]
+        first = do & ((qs_word & bit) == 0)
+        T = T.at[Ci].add(jnp.where(first, s, 0.0))
+        d = d.at[Ci].add(first.astype(jnp.int32))
+        qseen = qseen.at[Ci, qw].set(
+            jnp.where(first, qs_word | bit, qs_word))
+        seen = seen.at[Ci].set(seen[Ci] | do)
+
+        # --- greedy admission (iLB, Lemma 5) ----------------------------
+        qm_word = qmatched[Ci, qw]
+        q_free = (qm_word & bit) == 0
+        t_free = ~slot_matched[slot]
+        adm = do & q_free & t_free
+        S = S.at[Ci].add(jnp.where(adm, s, 0.0))
+        l = l.at[Ci].add(adm.astype(jnp.int32))
+        qmatched = qmatched.at[Ci, qw].set(
+            jnp.where(adm, qm_word | bit, qm_word))
+        slot_matched = slot_matched.at[slot].set(
+            slot_matched[slot] | adm)
+        return (S, l, T, d, seen, qmatched, qseen, slot_matched)
+
+    (S, l, T, d, seen, qmatched, qseen, slot_matched) = jax.lax.fori_loop(
+        0, chunk_len, ev_body,
+        (S, l, T, d, seen, qmatched, qseen, slot_matched))
+
+    # --- vectorized filter pass (per chunk) -----------------------------
+    s_now = c_sim[-1]
+    theta_lb = jnp.maximum(theta_lb, kth_largest(S, k))
+    iub = compute_iub(S, l, T, d, cap, s_now, seen, ub_mode)
+    killed = prune_mask(iub, theta_lb, seen, alive)
+    alive = alive & ~killed
+    n_killed = jnp.sum(killed)
+    return (S, l, T, d, seen, alive, qmatched, qseen, slot_matched,
+            theta_lb), n_killed
+
+
+def refine_finalize(state, cap, alpha, k: int, ub_mode: str):
+    """Stream exhausted: drop the s_now term (see module docstring) and run
+    the final filter pass.  Returns (S, ub_final, seen, alive, theta_lb,
+    n_killed_final)."""
+    S, l, T, d, seen, alive, _, _, _, theta_lb = state
     s_final = alpha if ub_mode == "paper" else jnp.float32(0.0)
     ub_final = compute_iub(S, l, T, d, cap, s_final, seen, ub_mode)
     theta_lb = jnp.maximum(theta_lb, kth_largest(S, k))
     killed = prune_mask(ub_final, theta_lb, seen, alive)
     alive = alive & ~killed
+    return S, ub_final, seen, alive, theta_lb, jnp.sum(killed)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "num_sets", "q_words", "total_slots", "ub_mode"))
+def _run_refinement(ev_set, ev_q, ev_slot, ev_sim, cap, k: int,
+                    num_sets: int, q_words: int, total_slots: int,
+                    ub_mode: str, alpha):
+    """Scan all chunks.  ev_* are (n_chunks, chunk)."""
+    state0 = refine_carry_init(num_sets, q_words, total_slots)
+    state, killed_per_chunk = jax.lax.scan(
+        lambda s, c: refine_chunk_step(s, c, cap, k, ub_mode),
+        state0, (ev_set, ev_q, ev_slot, ev_sim))
+    S, ub_final, seen, alive, theta_lb, killed_final = refine_finalize(
+        state, cap, alpha, k, ub_mode)
     return (S, ub_final, seen, alive, theta_lb,
-            jnp.sum(killed_per_chunk) + jnp.sum(killed))
+            jnp.sum(killed_per_chunk) + killed_final)
 
 
 def _dispatch_refinement(events: EventStream, set_sizes: np.ndarray, nq: int,
@@ -148,6 +170,7 @@ def _dispatch_refinement(events: EventStream, set_sizes: np.ndarray, nq: int,
     while p < q_words:
         p *= 2
     q_words = p
+    instrument.record("h2d:refine_dispatch")
     out = _run_refinement(
         jnp.asarray(ev_set), jnp.asarray(ev_q), jnp.asarray(ev_slot),
         jnp.asarray(ev_sim), cap, k, len(set_sizes), q_words, total_slots,
@@ -157,6 +180,7 @@ def _dispatch_refinement(events: EventStream, set_sizes: np.ndarray, nq: int,
 
 def _materialize_refinement(out, n_chunks: int,
                             events: EventStream) -> RefinementResult:
+    instrument.record("d2h:refine_materialize")
     S, ub, seen, alive, theta_lb, n_pruned = out
     stats = SearchStats(
         candidates=int(jnp.sum(seen)),

@@ -45,17 +45,21 @@ from .postprocess import PostprocessState, VerifierPool, drive_states
 from .refinement import _dispatch_refinement, _materialize_refinement
 from .token_stream import build_token_stream_batch, expand_to_events
 from .types import (SearchParams, SearchResult, SearchStats, SetCollection)
+from ..runtime import instrument
 
 
 @dataclasses.dataclass
 class SchedulerStats:
-    """Instrumentation of one plan execution (the overlap story)."""
+    """Instrumentation of one plan execution (the overlap/fused story)."""
 
     tiles: int = 0                 # (query x partition) tiles executed
-    rounds: int = 0                # lock-step verification rounds
+    rounds: int = 0                # host lock-step verification rounds
     fused_requests: int = 0        # verify requests fused across tiles
     bound_raises: int = 0          # tile thetas raised by another tile
     backward_raises: int = 0       # ... where the source is a LATER partition
+    schedule: str = ""             # resolved drive order of this plan
+    waves: int = 0                 # fused wave programs dispatched
+    device_rounds: int = 0         # verification rounds run inside waves
     theta_trace: List[np.ndarray] = dataclasses.field(default_factory=list)
     # per-query theta_lb after each round (monotone non-decreasing rows)
 
@@ -164,11 +168,26 @@ def _finish_tile(tile: _Tile, id_offset: int) -> None:
 
 def run_plan(plan: ExecutionPlan, sim_provider, params: SearchParams,
              schedule: str = "overlap",
-             bound_exchange: Optional[Callable] = None
-             ) -> List[List[SearchResult]]:
+             bound_exchange: Optional[Callable] = None,
+             mesh=None) -> List[List[SearchResult]]:
     """Drive every tile of ``plan`` to completion; returns per-query lists
-    of per-partition results (partition order), ids already globalized."""
-    if schedule == "overlap":
+    of per-partition results (partition order), ids already globalized.
+
+    ``schedule='fused'`` resolves to the on-device wave pipeline where it
+    can run (TPU backend, or interpret mode when ``params.fused ==
+    'interpret'``, with a dense cosine provider — see
+    ``core.wave.fused_available``) and falls back to ``overlap``
+    elsewhere; all three schedules return bit-identical exact results.
+    ``mesh`` plugs the repository-shard mesh into the fused program's
+    on-device bound exchange (DESIGN.md §5)."""
+    if schedule == "fused":
+        from .wave import fused_available
+        if not fused_available(params, sim_provider):
+            schedule = "overlap"
+    plan.stats.schedule = schedule
+    if schedule == "fused":
+        _run_fused(plan, sim_provider, params, bound_exchange, mesh)
+    elif schedule == "overlap":
         _run_overlapped(plan, sim_provider, params, bound_exchange)
     elif schedule == "sequential":
         _run_sequential(plan, sim_provider, params, bound_exchange)
@@ -185,7 +204,8 @@ def _run_sequential(plan: ExecutionPlan, sim, params: SearchParams,
     ``search``/``search_batch`` trajectory, bit for bit).  The bound
     exchange (when configured) runs once per completed partition, at the
     loop's single inter-partition communication point."""
-    streams = build_token_stream_batch(plan.queries, sim, params.alpha)
+    streams = build_token_stream_batch(plan.queries, sim, params.alpha,
+                                       use_kernel=params.stream_use_kernel)
     pool = VerifierPool(plan.pool_coll, sim, params)
     theta = plan.theta0.copy()
     for pi in range(len(plan.indexes)):
@@ -214,7 +234,8 @@ def _run_overlapped(plan: ExecutionPlan, sim, params: SearchParams,
                     bound_exchange: Optional[Callable]) -> None:
     """All tiles in flight at once: pipelined refinement dispatch across
     partitions, one global verification queue, bidirectional bounds."""
-    streams = build_token_stream_batch(plan.queries, sim, params.alpha)
+    streams = build_token_stream_batch(plan.queries, sim, params.alpha,
+                                       use_kernel=params.stream_use_kernel)
     # Dispatch EVERY tile's refinement before materializing any: the
     # device works through later partitions' scans back-to-back while the
     # host expands and materializes earlier tiles (the sequential loop
@@ -236,6 +257,84 @@ def _run_overlapped(plan: ExecutionPlan, sim, params: SearchParams,
     for t in live:
         _make_state(t, plan.queries[t.qi], theta[t.qi], params)
 
+    pool = VerifierPool(plan.pool_coll, sim, params)
+    drive_states(pool, [t.state for t in live],
+                 round_hook=lambda n: _feedback_round(plan, live, theta,
+                                                      bound_exchange, n))
+    for t in live:
+        _finish_tile(t, t.index.id_offset)
+
+
+# --------------------------------------------------------------------- fused
+def _run_fused(plan: ExecutionPlan, sim, params: SearchParams,
+               bound_exchange: Optional[Callable], mesh=None) -> None:
+    """On-device wave pipeline (DESIGN.md §3): one device program per
+    partition wave — refinement chunk scans, candidate compaction,
+    theta_lb exchange, and the first R verification rounds — with waves
+    chained through a donated on-device theta carry (no host round-trip
+    between partitions).  The host drive loop resumes from each tile's
+    wave state for the remaining verification, with the same global queue
+    and bidirectional bound feedback as the overlap schedule."""
+    from .postprocess import PostprocessState
+    from .wave import WaveRunner, _pow2
+
+    streams = build_token_stream_batch(plan.queries, sim, params.alpha,
+                                       use_kernel=params.stream_use_kernel)
+    runner = WaveRunner(sim, params, mesh=mesh)
+    B_pad = _pow2(max(1, len(plan.queries)))
+    theta_dev = runner.init_theta(plan.theta0, B_pad)
+
+    # Dispatch EVERY wave before materializing any (the overlap idea, one
+    # level up): wave p+1's program queues behind wave p on-device while
+    # the host expands events for later partitions.
+    launches = []
+    for index in plan.indexes:
+        launch, theta_dev = runner.launch_wave(index, plan.queries,
+                                               streams, theta_dev)
+        launches.append(launch)
+        plan.stats.waves += 1
+        plan.stats.device_rounds += launch.cfg.rounds
+
+    instrument.record("d2h:theta_materialize")
+    theta = np.maximum(plan.theta0,
+                       np.asarray(theta_dev,
+                                  np.float64)[:len(plan.queries)])
+    plan.stats.theta_trace.append(theta.copy())
+
+    live: List[_Tile] = []
+    for pi, launch in enumerate(launches):
+        out = runner.materialize(launch)
+        for t in (t for t in plan.tiles if t.pi == pi):
+            meta = launch.tile_meta[t.qi]
+            if meta.empty:
+                t.result = _empty_result()
+                continue
+            qi = t.qi
+            surv = out.surv_idx[qi][:int(out.surv_cnt[qi])]
+            stats = SearchStats(
+                candidates=int(out.candidates[qi]),
+                pruned_refinement=int(out.pruned_ref[qi]),
+                pruned_postprocess=int(out.pruned_post[qi]),
+                stream_tuples=meta.n_tuples,
+                stream_events=meta.n_events,
+                refinement_chunks=meta.n_chunks)
+            t.state = PostprocessState.from_wave(
+                plan.queries[qi], surv,
+                out.lb[qi][surv], out.ub[qi][surv],
+                out.live[qi][surv], out.verified[qi][surv],
+                em_early=int(out.em_early[qi]),
+                em_full=int(out.em_full[qi]),
+                theta_lb=float(theta[qi]), params=params, stats=stats,
+                id_base=t.id_base)
+            live.append(t)
+
+    # host continuation: same exchange + global queue as overlap
+    _exchange_bounds(plan, live, theta, bound_exchange,
+                     tile_theta=lambda t: t.state.theta_lb,
+                     raisable=lambda t: not t.state.finished())
+    for t in live:
+        if not t.state.finished():
+            t.state.raise_theta(theta[t.qi])
     pool = VerifierPool(plan.pool_coll, sim, params)
     drive_states(pool, [t.state for t in live],
                  round_hook=lambda n: _feedback_round(plan, live, theta,

@@ -67,6 +67,47 @@ def search_partition_batch(index: KoiosIndex, queries: Sequence[np.ndarray],
             run_plan(plan, sim_provider, params, schedule="sequential")]
 
 
+def partition_ranges(set_sizes: np.ndarray, partitions: int,
+                     by: str = "sets") -> np.ndarray:
+    """Contiguous partition boundaries over the repository (paper §VI).
+
+    ``by='sets'``: equal set counts (``np.linspace`` — the historical
+    default).  ``by='tokens'``: greedy token-count balancer (DESIGN.md §8
+    item 5, resolved): walk the prefix token counts and cut at whichever
+    set boundary lands nearest each i/P share of the total, so every
+    partition's token count is within half the largest set of the ideal
+    share.  Balanced *work* per partition is what keeps fused waves
+    uniform enough to overlap (LES3 makes the same observation for
+    partition-quality -> exact-search cost).  Boundaries are forced
+    strictly increasing, so every partition is non-empty whenever
+    ``partitions <= num_sets``."""
+    n = len(set_sizes)
+    if by == "sets":
+        return np.linspace(0, n, partitions + 1).astype(int)
+    assert by == "tokens", f"unknown partitioning {by!r}"
+    cum = np.concatenate([[0], np.cumsum(set_sizes, dtype=np.int64)])
+    targets = cum[-1] * np.arange(1, partitions) / partitions
+    cuts = np.searchsorted(cum, targets)
+    # nearest set boundary to each target (greedy balance, then monotone)
+    cuts = np.where(
+        np.abs(cum[np.maximum(cuts - 1, 0)] - targets)
+        <= np.abs(cum[np.minimum(cuts, n)] - targets),
+        np.maximum(cuts - 1, 0), np.minimum(cuts, n))
+    bounds = np.concatenate([[0], cuts, [n]]).astype(int)
+    # non-empty partitions: the forward pass pushes collided cuts right
+    # (clamped at n), the backward pass pulls the clamped tail left — a
+    # single huge set can drag every greedy cut to n, and only the pair
+    # of passes guarantees strictly increasing bounds for P <= num_sets
+    for i in range(1, len(bounds)):
+        bounds[i] = min(max(bounds[i], bounds[i - 1] + 1), n)
+    for i in range(len(bounds) - 2, 0, -1):
+        bounds[i] = min(bounds[i], bounds[i + 1] - 1)
+    # partitions > num_sets cannot all be non-empty: the backward pass
+    # then pushes below 0 — clamp and re-monotonize so the caller drops
+    # the empty ranges, exactly like the by='sets' linspace path
+    return np.maximum.accumulate(np.clip(bounds, 0, n))
+
+
 def merge_topk(results: Sequence[SearchResult], k: int) -> SearchResult:
     """Merge per-partition top-k lists (paper: 'merge-sorted')."""
     ids = np.concatenate([r.ids for r in results])
@@ -86,26 +127,33 @@ class KoiosSearch:
     """Public search API over a (possibly partitioned) repository.
 
     ``schedule`` selects the default drive order of the partition
-    scheduler ('overlap' or 'sequential'); both are exact and
-    bit-identical.  ``bound_exchange`` optionally plugs a mesh
-    all-reduce-max into the per-round theta_lb exchange (see
-    ``repro.runtime.sharding.all_reduce_max``).  ``scheduler_stats`` holds
-    the :class:`SchedulerStats` of the most recent call.
+    scheduler: 'fused' (default — the on-device wave pipeline where it
+    can run, resolving to 'overlap' off-TPU unless ``params.fused ==
+    'interpret'``), 'overlap', or 'sequential'; all are exact and
+    bit-identical.  ``partition_by`` picks the repository split:
+    'sets' (equal set counts) or 'tokens' (greedy token-count balance —
+    see :func:`partition_ranges`).  ``bound_exchange`` optionally plugs a
+    mesh all-reduce-max into the per-round theta_lb exchange (see
+    ``repro.runtime.sharding.all_reduce_max``); ``mesh`` additionally
+    moves the fused schedule's exchange on-device.  ``scheduler_stats``
+    holds the :class:`SchedulerStats` of the most recent call.
     """
 
     def __init__(self, coll: SetCollection, sim_provider,
                  params: Optional[SearchParams] = None,
-                 partitions: int = 1, schedule: str = "overlap",
-                 bound_exchange: Optional[Callable] = None):
+                 partitions: int = 1, schedule: str = "fused",
+                 bound_exchange: Optional[Callable] = None,
+                 partition_by: str = "sets", mesh=None):
         self.params = params or SearchParams()
         self.sim = sim_provider
         self.coll = coll
         self.schedule = schedule
         self.bound_exchange = bound_exchange
+        self.mesh = mesh
         self.scheduler_stats: Optional[SchedulerStats] = None
         self.partitions = []
-        n = coll.num_sets
-        bounds = np.linspace(0, n, partitions + 1).astype(int)
+        bounds = partition_ranges(coll.set_sizes, partitions,
+                                  by=partition_by)
         for lo, hi in zip(bounds[:-1], bounds[1:]):
             if hi > lo:
                 self.partitions.append(
@@ -137,6 +185,7 @@ class KoiosSearch:
         plan = ExecutionPlan(self.partitions, queries, pool_coll=self.coll)
         per_query = run_plan(plan, self.sim, params,
                              schedule=schedule or self.schedule,
-                             bound_exchange=self.bound_exchange)
+                             bound_exchange=self.bound_exchange,
+                             mesh=self.mesh)
         self.scheduler_stats = plan.stats
         return [merge_topk(rs, params.k) for rs in per_query]

@@ -61,6 +61,19 @@ class EmbeddingSimilarity:
         self.table = jnp.asarray(table, dtype=jnp.float32)
         self.vocab_size, self.dim = table.shape
 
+    @property
+    def normalized_table(self) -> jnp.ndarray:
+        """Row-L2-normalized table, computed once and kept device-resident
+        (the fused wave program and the kernel stream path gather from it
+        every call).  Row-wise normalization is subset-invariant, so
+        entries gathered from this table match the per-call
+        ``_cosine_block`` normalization bit for bit."""
+        t = getattr(self, "_table_n", None)
+        if t is None:
+            t = _l2_normalize(self.table)
+            self._table_n = t
+        return t
+
     def _fix_identity(self, s: jnp.ndarray, q_ids, t_ids) -> jnp.ndarray:
         same = q_ids[:, None] == t_ids[None, :]
         return jnp.where(same, 1.0, s)
@@ -76,6 +89,24 @@ class EmbeddingSimilarity:
         t_ids = jnp.arange(lo, hi)
         s = _cosine_block(self.table[q_ids], self.table[lo:hi])
         return self._fix_identity(s, q_ids, t_ids)
+
+
+def normalized_table_for(provider) -> jnp.ndarray:
+    """Cached device-resident normalized table of any cosine table
+    provider (the fused wave program and the kernel stream path share
+    this).  :class:`EmbeddingSimilarity` subclasses expose the cached
+    property directly; duck-typed providers with a ``.table`` get the
+    same one-time normalize-and-cache treatment here."""
+    t = getattr(provider, "normalized_table", None)
+    if t is not None:
+        return t
+    t = getattr(provider, "_table_n", None)
+    if t is None:
+        from ..runtime import instrument
+        instrument.record("h2d:table_upload")
+        t = _l2_normalize(jnp.asarray(provider.table, jnp.float32))
+        provider._table_n = t
+    return t
 
 
 class NGramJaccardSimilarity:

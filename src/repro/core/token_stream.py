@@ -87,8 +87,73 @@ def _finalize_stream(query: np.ndarray, q_pos: np.ndarray, token: np.ndarray,
     return TokenStream(q_pos=q_pos[order], token=token[order], sim=sim[order])
 
 
+def _build_stream_entries_kernel(stacked: np.ndarray, sim_provider,
+                                 alpha: float, block_size: int):
+    """(row, token, sim >= alpha) triples via the ``cosine_topk`` Pallas
+    kernel (DESIGN.md §6) instead of the jnp provider sweep.
+
+    The kernel keeps a running top-k on-chip, so the (rows x |V|) score
+    matrix never round-trips to HBM; ``k`` doubles until no row's k-th
+    score clears alpha (then the top-k provably contains every >= alpha
+    entry).  Per-entry math matches the provider path bit for bit: the
+    kernel dots the same L2-normalized rows the provider normalizes per
+    block (row-wise normalization is subset-invariant), and clip +
+    identity-fix are applied to the returned values exactly as
+    ``EmbeddingSimilarity`` applies them to score blocks.  Entries are
+    re-ordered to the provider sweep's (vocab block, row, token) order so
+    downstream admission order — and therefore every bound — is
+    identical.
+    """
+    import jax.numpy as jnp
+
+    from ..kernels import ops as kops
+    from ..runtime import instrument
+
+    vocab = sim_provider.vocab_size
+    if not len(stacked):
+        z = np.zeros(0, np.int64)
+        return z, z.astype(np.int32), np.zeros(0, np.float32)
+    # cached device-resident normalized table; query rows gathered on
+    # device (no full-table round-trip per call)
+    from .similarity import normalized_table_for
+    table_n = normalized_table_for(sim_provider)
+    qe = table_n[jnp.asarray(stacked)]
+    k = min(128, vocab)
+    while True:
+        instrument.record("h2d:stream_kernel_dispatch")
+        instrument.record("d2h:stream_materialize")
+        vals, idx = kops.cosine_topk(qe, table_n, k=k)
+        vals = np.asarray(vals)
+        idx = np.asarray(idx)
+        if k == vocab or float(vals[:, -1].max()) < alpha:
+            break
+        k = min(k * 2, vocab)          # a row saturated: deepen the top-k
+
+    # provider-path value semantics: clip to [0, 1], identity pairs 1.0
+    vals = np.clip(vals, 0.0, 1.0)
+    vals = np.where(idx == stacked[:, None], np.float32(1.0),
+                    vals).astype(np.float32)
+    rows, cols = np.nonzero(vals >= alpha)
+    q_rows = rows.astype(np.int64)
+    token = idx[rows, cols].astype(np.int32)
+    sim = vals[rows, cols]
+
+    # identity pairs the top-k cutoff may have missed (always >= alpha)
+    key = q_rows * vocab + token
+    id_key = np.arange(len(stacked), dtype=np.int64) * vocab + stacked
+    missing = ~np.isin(id_key, key)
+    q_rows = np.concatenate([q_rows, np.nonzero(missing)[0]])
+    token = np.concatenate([token, stacked[missing]])
+    sim = np.concatenate([sim, np.ones(missing.sum(), np.float32)])
+
+    # the provider sweep emits (block asc, stacked row asc, token asc)
+    order = np.lexsort((token, q_rows, token // block_size))
+    return q_rows[order], token[order], sim[order]
+
+
 def build_token_stream_batch(queries, sim_provider, alpha: float,
-                             block_size: int = 4096) -> "list[TokenStream]":
+                             block_size: int = 4096,
+                             use_kernel: bool = False) -> "list[TokenStream]":
     """Token streams for B queries from ONE blocked similarity sweep.
 
     The queries are stacked into a single (sum |Q_b|, |V|-block) similarity
@@ -113,6 +178,20 @@ def build_token_stream_batch(queries, sim_provider, alpha: float,
     # row ranges of each query inside the stacked matrix
     bounds = np.zeros(len(queries) + 1, np.int64)
     np.cumsum([len(q) for q in queries], out=bounds[1:])
+
+    # the kernel path computes cosine from the provider's embedding table;
+    # any other similarity (e.g. n-gram Jaccard) falls back to the
+    # provider sweep — same gate as the fused schedule's
+    if use_kernel and getattr(sim_provider, "name", None) == "cosine":
+        q_rows, token, sim = _build_stream_entries_kernel(
+            stacked, sim_provider, alpha, block_size)
+        out = []
+        for b, query in enumerate(queries):
+            m = (q_rows >= bounds[b]) & (q_rows < bounds[b + 1])
+            out.append(_finalize_stream(
+                query, (q_rows[m] - bounds[b]).astype(np.int32),
+                token[m], sim[m], vocab))
+        return out
 
     qs = [[] for _ in queries]
     ts = [[] for _ in queries]

@@ -84,12 +84,25 @@ class SearchParams:
     early_stream_stop: bool = False
     # report exact SO for the returned top-k (extra verifications)
     exact_scores: bool = True
+    # --- fused wave execution (DESIGN.md §3) ---
+    # 'auto' = run the fused schedule on TPU, fall back to overlap
+    # elsewhere; 'interpret' = force the fused wave program off-TPU
+    # (Pallas interpret mode — tests/CI); 'off' = never fuse
+    fused: str = "auto"
+    # device verification rounds executed inside each wave program before
+    # the host drive loop takes over (R in DESIGN.md §3)
+    wave_rounds: int = 2
+    # generate token streams with the cosine_topk Pallas kernel instead of
+    # the jnp provider sweep (interpret mode off-TPU; bit-identical streams)
+    stream_use_kernel: bool = False
 
     def __post_init__(self):
         assert self.k >= 1
         assert 0.0 < self.alpha <= 1.0
         assert self.verifier in ("auction", "hungarian", "hybrid")
         assert self.ub_mode in ("sound", "paper")
+        assert self.fused in ("auto", "interpret", "off")
+        assert self.wave_rounds >= 0
 
 
 @dataclasses.dataclass

@@ -1,0 +1,419 @@
+"""On-device fused wave execution (DESIGN.md §3, fused wave program).
+
+One device program per partition *wave* — the partition's (query x
+partition) tiles for the whole request batch — chaining what the overlap
+schedule round-trips through the host (DESIGN.md §8 item 6, resolved):
+
+  Stage A  all K refinement chunk scans (`lax.scan` over the shared
+           (carry, chunk) -> carry step from ``core.refinement``,
+           vmapped over the wave's queries);
+  Stage B  candidate compaction by prefix-sum mask
+           (``kernels.refine_verify.compact_indices``);
+  Stage C  theta_lb update + on-device bound exchange
+           (``runtime.sharding.all_reduce_max_traced`` — `lax.pmax`
+           over the repository shard axes, identity without a mesh);
+  Stage D  the first R auction/Hungarian verification rounds with
+           Lemma-8 dual-bound aborts, mirroring one
+           ``PostprocessState.next_request``/``apply`` cycle per round
+           (top-ub batch selection, weight recompute on the normalized
+           table, bracket application, UB-filter drops), with a bound
+           exchange after every round.
+
+Waves chain through a donated theta carry: wave p+1 consumes wave p's
+on-device theta output, so the scheduler dispatches every wave before
+materializing any (JAX async dispatch) and the host sees device data
+exactly once per wave.  The host drive loop then resumes from
+``PostprocessState.from_wave`` for whatever verification the R device
+rounds did not finish — the host path stays the bit-identical oracle.
+
+Exactness does not depend on the wave reproducing the host trajectory:
+every device step only ever (a) raises certified lower bounds, (b) drops
+candidates whose certified upper bound is strictly below such a bound, or
+(c) records certified [lb, ub] brackets (ambiguous auction brackets are
+resolved exactly on device, mirroring the pool's Hungarian fallback), so
+any schedule of these steps yields the same final top-k — the same
+invariant that makes overlap == sequential (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.refine_verify import candidate_weights, compact_indices
+from ..runtime import instrument
+from ..runtime.sharding import _round_down_f32, all_reduce_max_traced
+from .matching.auction import _auction_single, make_eps_schedule
+from .matching.hungarian import _hungarian_padded
+from .refinement import (refine_carry_init, refine_chunk_step,
+                         refine_finalize)
+from .token_stream import expand_to_events, pad_events
+from .types import SearchParams
+
+_NEGINF = jnp.float32(-jnp.inf)
+
+
+def _pow2(n: int, lo: int = 1) -> int:
+    p = lo
+    while p < n:
+        p *= 2
+    return p
+
+
+def fused_available(params: SearchParams, sim_provider) -> bool:
+    """Whether the fused schedule can run here (else: overlap fallback).
+
+    Requires a dense cosine embedding-table provider (the wave recomputes
+    verification weights on-device from the normalized table) and either
+    a TPU backend or an explicit opt-in to Pallas interpret mode
+    (``params.fused == 'interpret'`` — tests/CI off-TPU)."""
+    if params.fused == "off":
+        return False
+    if getattr(sim_provider, "name", None) != "cosine":
+        return False
+    if getattr(sim_provider, "table", None) is None:
+        return False
+    if jax.default_backend() == "tpu":
+        return True
+    return params.fused == "interpret"
+
+
+class WaveConfig(NamedTuple):
+    """Static (shape/mode) parameters of one wave program — the jit key."""
+
+    num_sets: int
+    total_slots: int
+    q_words: int
+    k: int
+    n_chunks: int
+    chunk: int
+    nq_pad: int
+    c_pad: int
+    B: int
+    verify_batch: int
+    rounds: int
+    ub_mode: str
+    verifier: str
+    alpha: float
+    interpret: bool
+    use_kernel: bool
+    max_rounds: int = 5000
+
+
+def _masked_kth(x, mask, k: int):
+    """k-th largest of ``x`` where ``mask``; 0.0 when fewer than k entries
+    are masked in — the device mirror of ``postprocess._kth``."""
+    if k > x.shape[0]:
+        return jnp.float32(0.0)
+    vals = jnp.where(mask, x, _NEGINF)
+    kth = jax.lax.top_k(vals, k)[0][k - 1]
+    return jnp.where(jnp.sum(mask) >= k, kth, jnp.float32(0.0))
+
+
+# Cap on the wave's per-round verification batch.  The device rounds'
+# vmapped solver runs all (B x vb) padded rows in lockstep — rows with no
+# pending candidate are nq=0-cheap but still march through the batch's max
+# trip count — so oversized round batches cost more than the saved host
+# round-trips buy (CPU interpret A/B: 16 beats 32 by ~1.3x at the opendata
+# P=4 preset).  The host continuation drains whatever the capped rounds
+# leave, so the cap never affects results, only the device/host split.
+_WAVE_VB_CAP = 16
+
+
+@functools.lru_cache(maxsize=None)
+def _wave_fn(cfg: WaveConfig, mesh):
+    """Build (and cache) the jitted wave program for one static config.
+
+    The theta carry (argument 6) is donated: waves chain through it, so
+    XLA reuses one buffer for the whole plan's bound vector."""
+    alpha = jnp.float32(cfg.alpha)
+    vb = min(cfg.verify_batch, cfg.num_sets)
+
+    def one_round(lb, ub, live, verified, th, qt, nq, table_n, set_tok,
+                  sizes32, eps):
+        """One verification round for one query — the jittable mirror of
+        PostprocessState.next_request + VerifierPool.verify_requests +
+        PostprocessState.apply (DESIGN.md §3)."""
+        # -- filter pass (theta refresh, UB filter, No-EM, batch pick) --
+        th = jnp.maximum(th, _masked_kth(lb, live, cfg.k))
+        drop = live & (ub < th)
+        n_drop = jnp.sum(drop & ~verified)
+        live = live & ~drop
+        theta_ub = _masked_kth(ub, live, cfg.k)
+        no_em = live & ~verified & (lb >= theta_ub)
+        need = live & ~verified & (ub > th) & ~no_em
+        _, sel = jax.lax.top_k(jnp.where(need, ub, _NEGINF), vb)
+        valid = jnp.take(need, sel)
+
+        # -- weights: same per-entry math as the host pool (bit-equal) --
+        toks = set_tok[sel]
+        ncs_b = jnp.where(valid, sizes32[sel], 0)
+        w = candidate_weights(table_n, qt, toks, sizes32[sel], nq, alpha)
+        nqs_b = jnp.where(valid, nq, 0)
+        th_b = jnp.where(valid, th, _NEGINF)
+
+        # -- solve (Lemma-8 dual aborts) --
+        if cfg.verifier == "hungarian":
+            so, _ = jax.vmap(_hungarian_padded)(w, nqs_b, ncs_b)
+            out_lb, out_ub = so, so
+            early = jnp.zeros((vb,), bool)
+            settle = valid                   # exact: every row settles
+            n_early = jnp.int32(0)
+            n_full = jnp.sum(valid)
+        else:
+            a_lb, a_ub, _, early, _ = jax.vmap(
+                lambda wi, ni, ci, ti: _auction_single(
+                    wi, ni, ci, eps, ti, cfg.max_rounds,
+                    use_kernel=cfg.use_kernel))(w, nqs_b, ncs_b, th_b)
+            # A bracket that straddles theta (or, in hybrid mode, any
+            # non-degenerate bracket) is NOT settled here: its row keeps
+            # the tightened bracket but stays unverified, so the host
+            # continuation re-verifies it with the pool's exact fallback.
+            # Paying a vmapped exact solve on-device for every row would
+            # forfeit the auction's entire advantage (DESIGN.md §8 item 4)
+            # in the common no-ambiguity case.
+            amb = (~early) & (a_lb < th_b) & (a_ub > th_b)
+            if cfg.verifier == "hybrid":
+                amb = amb | ((~early) & (a_ub - a_lb > 1e-6))
+            out_lb = a_lb
+            out_ub = jnp.maximum(a_ub, a_lb)
+            early = early & valid
+            settle = valid & ~amb
+            n_early = jnp.sum(early)
+            n_full = jnp.sum(valid & ~early & ~amb)
+
+        # -- apply (dense one-hot fold: no duplicate-index scatters) --
+        # brackets fold in for every solved row (tightening is always
+        # sound); only settled rows flip to verified
+        sets_iota = jnp.arange(cfg.num_sets)
+        mark = valid[:, None] & (sets_iota[None, :] == sel[:, None])
+        applied = jnp.any(mark, axis=0)
+        upd_lb = jnp.max(jnp.where(mark, out_lb[:, None], _NEGINF), axis=0)
+        upd_ub = jnp.min(jnp.where(mark, out_ub[:, None],
+                                   jnp.float32(jnp.inf)), axis=0)
+        lb = jnp.where(applied, jnp.maximum(lb, upd_lb), lb)
+        ub = jnp.where(applied, jnp.minimum(ub, upd_ub), ub)
+        verified = verified | jnp.any(mark & settle[:, None], axis=0)
+        dead = jnp.any(mark & early[:, None], axis=0)
+        live = live & ~dead
+        return lb, ub, live, verified, th, n_drop, n_early, n_full
+
+    def fn(ev_set, ev_q, ev_slot, ev_sim, qtok, nqs, theta, table_n,
+           set_tok, set_sizes, eps):
+        sizes32 = set_sizes.astype(jnp.int32)
+
+        # ---- Stage A: K refinement chunk scans, vmapped over the wave ----
+        def refine(es, eq, esl, esim, nq):
+            cap = jnp.minimum(sizes32, nq)
+            st0 = refine_carry_init(cfg.num_sets, cfg.q_words,
+                                    cfg.total_slots)
+            st, killed = jax.lax.scan(
+                lambda s, c: refine_chunk_step(s, c, cap, cfg.k,
+                                               cfg.ub_mode),
+                st0, (es, eq, esl, esim))
+            S, ub, seen, alive, th, killed_f = refine_finalize(
+                st, cap, alpha, cfg.k, cfg.ub_mode)
+            return S, ub, seen, alive, th, jnp.sum(killed) + killed_f
+
+        S, ub0, seen, alive, th_ref, pruned_ref = jax.vmap(refine)(
+            ev_set, ev_q, ev_slot, ev_sim, nqs)
+
+        # ---- Stage B: candidate compaction (prefix-sum mask kernel) ----
+        surv = seen & alive
+        surv_idx, surv_cnt = jax.vmap(
+            lambda m: compact_indices(m, interpret=cfg.interpret))(surv)
+
+        # ---- Stage C: theta update + on-device bound exchange ----
+        theta = jnp.maximum(theta, th_ref)
+        theta = all_reduce_max_traced(theta, mesh)
+
+        # ---- Stage D: first R verification rounds ----
+        lb, ub, live = S, ub0, surv
+        verified = jnp.zeros_like(surv)
+        zeros = jnp.zeros((cfg.B,), jnp.int32)
+
+        def round_step(carry, _):
+            lb, ub, live, verified, theta, c_post, c_early, c_full = carry
+            lb, ub, live, verified, th_q, dp, de, df = jax.vmap(
+                lambda l, u, lv, vf, t, q, n: one_round(
+                    l, u, lv, vf, t, q, n, table_n, set_tok, sizes32, eps)
+            )(lb, ub, live, verified, theta, qtok, nqs)
+            theta = all_reduce_max_traced(th_q, mesh)
+            return (lb, ub, live, verified, theta,
+                    c_post + dp, c_early + de, c_full + df), None
+
+        (lb, ub, live, verified, theta, c_post, c_early, c_full), _ = \
+            jax.lax.scan(round_step,
+                         (lb, ub, live, verified, theta,
+                          zeros, zeros, zeros),
+                         None, length=cfg.rounds)
+
+        return (surv_idx, surv_cnt, lb, ub, live, verified,
+                jnp.sum(seen, axis=1), pruned_ref,
+                c_post, c_early, c_full, theta)
+
+    return jax.jit(fn, donate_argnums=(6,))
+
+
+@dataclasses.dataclass
+class _TileMeta:
+    """Host-side per-tile stream facts (stats; not part of the program)."""
+
+    empty: bool
+    n_tuples: int = 0
+    n_events: int = 0
+    n_chunks: int = 0
+
+
+@dataclasses.dataclass
+class WaveLaunch:
+    """An in-flight wave: device outputs + per-tile metadata."""
+
+    out: tuple                       # device arrays (async)
+    tile_meta: List[_TileMeta]
+    cfg: WaveConfig
+
+
+@dataclasses.dataclass
+class WaveOutputs:
+    surv_idx: np.ndarray             # (B, num_sets) int32, -1 padded
+    surv_cnt: np.ndarray             # (B,)
+    lb: np.ndarray                   # (B, num_sets) f32
+    ub: np.ndarray
+    live: np.ndarray                 # (B, num_sets) bool
+    verified: np.ndarray
+    candidates: np.ndarray           # (B,) int32
+    pruned_ref: np.ndarray
+    pruned_post: np.ndarray
+    em_early: np.ndarray
+    em_full: np.ndarray
+
+
+class WaveRunner:
+    """Per-plan fused-wave context: device-resident normalized table,
+    per-partition dense operands (cached on the index), theta chaining."""
+
+    def __init__(self, sim_provider, params: SearchParams,
+                 mesh=None):
+        self.params = params
+        self.mesh = mesh
+        self.interpret = jax.default_backend() != "tpu"
+        # normalizing the full table row-wise equals normalizing any row
+        # subset, so wave weights match the host pool's bit for bit; the
+        # table is normalized once and cached on the provider
+        from .similarity import normalized_table_for
+        self.table_n = normalized_table_for(sim_provider)
+        self.eps = make_eps_schedule(params.auction_eps)
+
+    # ------------------------------------------------------------ operands
+    def _partition_operands(self, index):
+        # Dense (num_sets, pow2(max set size)) token matrix, cached on
+        # the index for the engine's lifetime.  On a size-skewed
+        # partition one outlier set inflates c_pad for every row —
+        # token-balanced partitioning (partition_ranges(by="tokens"))
+        # keeps partitions uniform, and a CSR-gathering wave for extreme
+        # skew is future work; at repository-partition scales the dense
+        # form is what keeps every round's weight gather one slice.
+        ops = getattr(index, "_wave_operands", None)
+        if ops is None:
+            coll = index.coll
+            sizes = coll.set_sizes
+            c_pad = _pow2(int(sizes.max()) if len(sizes) else 1)
+            dense = np.full((coll.num_sets, c_pad), -1, np.int32)
+            if coll.total_tokens:
+                rows = np.repeat(np.arange(coll.num_sets), sizes)
+                cols = np.arange(coll.total_tokens) \
+                    - np.repeat(coll.set_indptr[:-1], sizes)
+                dense[rows, cols] = coll.set_tokens
+            ops = (jnp.asarray(dense), jnp.asarray(sizes, jnp.int32), c_pad)
+            index._wave_operands = ops
+        return ops
+
+    def init_theta(self, theta0: np.ndarray, B_pad: int):
+        t = np.zeros(B_pad, np.float32)
+        t[:len(theta0)] = _round_down_f32(theta0)
+        return jnp.asarray(t)
+
+    # -------------------------------------------------------------- launch
+    def launch_wave(self, index, queries: Sequence[np.ndarray], streams,
+                    theta_dev) -> "tuple[WaveLaunch, object]":
+        """Dispatch one partition wave; returns (launch, chained theta).
+
+        Nothing is materialized here — JAX async dispatch lets the next
+        wave queue behind this one on-device while the host expands the
+        following partition's events."""
+        set_tok, sizes32, c_pad = self._partition_operands(index)
+        coll = index.coll
+        B_pad = theta_dev.shape[0]
+        chunk = self.params.chunk_size
+
+        metas: List[_TileMeta] = []
+        padded = []
+        for qi, q in enumerate(queries):
+            events = expand_to_events(streams[qi], index.inv)
+            if len(events) == 0:
+                metas.append(_TileMeta(empty=True))
+                padded.append(None)
+                continue
+            ev = pad_events(events, chunk)
+            metas.append(_TileMeta(empty=False, n_tuples=events.n_tuples,
+                                   n_events=len(events),
+                                   n_chunks=ev[0].shape[0]))
+            padded.append(ev)
+
+        n_max = max([m.n_chunks for m in metas if not m.empty] or [1])
+        nq_max = max([len(q) for q in queries] or [1])
+        nq_pad = _pow2(max(nq_max, 1))
+        q_words = _pow2(max(1, -(-nq_max // 32)))
+
+        ev_set = np.full((B_pad, n_max, chunk), -1, np.int32)
+        ev_q = np.zeros((B_pad, n_max, chunk), np.int32)
+        ev_slot = np.zeros((B_pad, n_max, chunk), np.int64)
+        ev_sim = np.ones((B_pad, n_max, chunk), np.float32)
+        qtok = np.full((B_pad, nq_pad), -1, np.int32)
+        nqs = np.zeros(B_pad, np.int32)
+        for qi, q in enumerate(queries):
+            qtok[qi, :len(q)] = q
+            nqs[qi] = len(q)
+            ev = padded[qi]
+            if ev is None:
+                continue
+            n_i = ev[0].shape[0]
+            ev_set[qi, :n_i] = ev[0]
+            ev_q[qi, :n_i] = ev[1]
+            ev_slot[qi, :n_i] = ev[2]
+            # extra pad chunks repeat the tile's final sim: the filter
+            # pass re-evaluates at the same (valid) stream position, a
+            # no-op (see core.token_stream.pad_events)
+            ev_sim[qi] = ev[3][-1, -1]
+            ev_sim[qi, :n_i] = ev[3]
+
+        cfg = WaveConfig(
+            num_sets=coll.num_sets, total_slots=coll.total_tokens,
+            q_words=q_words, k=self.params.k, n_chunks=n_max, chunk=chunk,
+            nq_pad=nq_pad, c_pad=c_pad, B=B_pad,
+            verify_batch=min(self.params.verify_batch, _WAVE_VB_CAP),
+            rounds=self.params.wave_rounds, ub_mode=self.params.ub_mode,
+            verifier=self.params.verifier, alpha=float(self.params.alpha),
+            interpret=self.interpret, use_kernel=not self.interpret)
+        fn = _wave_fn(cfg, self.mesh)
+        instrument.record("h2d:wave_dispatch")
+        out = fn(jnp.asarray(ev_set), jnp.asarray(ev_q),
+                 jnp.asarray(ev_slot), jnp.asarray(ev_sim),
+                 jnp.asarray(qtok), jnp.asarray(nqs), theta_dev,
+                 self.table_n, set_tok, sizes32, self.eps)
+        return WaveLaunch(out=out, tile_meta=metas, cfg=cfg), out[-1]
+
+    # --------------------------------------------------------- materialize
+    def materialize(self, launch: WaveLaunch) -> WaveOutputs:
+        """One blocking device->host transfer per wave.  The trailing
+        theta output is NOT read — it was donated into the next wave's
+        program (the carry chain) and only the final wave's copy survives
+        (the scheduler reads that one directly)."""
+        instrument.record("d2h:wave_materialize")
+        vals = [np.asarray(x) for x in launch.out[:-1]]
+        return WaveOutputs(*vals)

@@ -16,6 +16,7 @@ from . import ref
 from .auction_round import auction_topk2 as _auction_topk2
 from .cosine_topk import cosine_topk as _cosine_topk
 from .flash_attention import flash_attention as _flash_attention
+from .refine_verify import compact_indices as _compact_indices
 from .ssd_scan import ssd_chunked as _ssd_chunked
 
 
@@ -27,6 +28,12 @@ def cosine_topk(qe, ev, k: int, bv: int = 512):
     """Blocked cosine top-k (token-stream generator).  See cosine_topk.py."""
     return _cosine_topk(jnp.asarray(qe), jnp.asarray(ev), k=k, bv=bv,
                         interpret=_interpret())
+
+
+def compact_indices(mask):
+    """Prefix-sum mask compaction (wave candidate sets).  See
+    refine_verify.py."""
+    return _compact_indices(jnp.asarray(mask), interpret=_interpret())
 
 
 def auction_topk2(wm, prices, bn: int = 256):
@@ -61,6 +68,7 @@ def flash_attention(q, k, v, bq: int = 256, bk: int = 256,
 
 # re-exported oracles (benchmarks compare against these)
 cosine_topk_ref = ref.cosine_topk_ref
+compact_indices_ref = ref.compact_indices_ref
 auction_topk2_ref = ref.auction_topk2_ref
 ssd_ref = ref.ssd_ref
 flash_attention_ref = ref.flash_attention_ref

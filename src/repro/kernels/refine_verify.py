@@ -1,0 +1,107 @@
+"""Pallas pieces of the fused refine+verify wave program (DESIGN.md §3).
+
+The on-device wave program (``repro.core.wave``) chains the refinement
+chunk scan into the first verification rounds without a host round-trip.
+Two device primitives live here because they are shared by that program
+and by standalone callers:
+
+* ``compact_indices`` — candidate compaction by prefix-sum mask.  The
+  refinement scan ends with a (num_sets,) survivor mask; verification
+  wants the survivor *indices* in ascending order (the host path's
+  ``mask.nonzero()[0]``).  The kernel computes an inclusive prefix sum
+  over the mask, derives every element's target slot (survivors first,
+  both groups in ascending index order), and writes the inverse
+  permutation with a sequential ``pl.store`` loop — dynamic scalar
+  stores lower on Mosaic where a vector scatter would not.  One grid
+  step, (1, n) blocks: n int32 lanes in + n out, ~8 KB per 1k sets —
+  VMEM is never the constraint at repository-partition sizes.
+
+* ``candidate_weights`` — the verification weight tensor for one round's
+  candidate batch, computed from the *normalized* embedding table so the
+  per-entry math (a d-dim dot product, clip to [0, 1], identity pairs
+  forced to 1.0, alpha-threshold) is element-for-element the computation
+  ``VerifierPool.weights_for_requests`` runs on the host.  Pure jnp: the
+  contraction is MXU work already; fusing it buys nothing a matmul
+  doesn't.
+
+Both have pure-jnp oracles in ``ref.py`` and interpret-mode dispatch in
+``ops.py`` (the repo-wide kernel convention, DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compact_kernel(mask_ref, idx_ref, cnt_ref, *, n: int):
+    m = mask_ref[...]                                  # (1, n) int32 0/1
+    ps = jnp.cumsum(m, axis=1)                         # inclusive prefix sum
+    total = ps[0, n - 1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    # survivor i -> slot ps[i]-1; dropped i -> slot total + (i - ps[i]):
+    # both groups keep ascending index order, so slots form a permutation
+    pos = jnp.where(m > 0, ps - 1, total + iota - ps)[0]
+    val = jnp.where(m[0] > 0, iota[0], jnp.int32(-1))
+
+    def body(i, _):
+        pl.store(idx_ref, (slice(0, 1), pl.dslice(pos[i], 1)),
+                 val[i].reshape(1, 1))
+        return 0
+
+    jax.lax.fori_loop(0, n, body, 0)
+    cnt_ref[...] = total.reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def compact_indices(mask: jnp.ndarray, interpret: bool = False):
+    """Survivor indices of a boolean mask, ascending, -1 beyond the count.
+
+    mask: (n,) bool.  Returns (idx (n,) int32, count () int32) with
+    ``idx[:count]`` == ``mask.nonzero()[0]`` and ``idx[count:] == -1``.
+    """
+    n = mask.shape[0]
+    idx, cnt = pl.pallas_call(
+        functools.partial(_compact_kernel, n=n),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(mask.astype(jnp.int32)[None, :])
+    return idx[0], cnt[0, 0]
+
+
+def candidate_weights(table_n: jnp.ndarray, query_tok: jnp.ndarray,
+                      cand_tok: jnp.ndarray, cand_sizes: jnp.ndarray,
+                      nq: jnp.ndarray, alpha) -> jnp.ndarray:
+    """Alpha-thresholded verification weights for one candidate batch.
+
+    table_n: (vocab, d) row-L2-normalized embedding table (normalizing the
+      full table row-wise equals normalizing any row subset, so entries
+      match the host pool's per-call ``_cosine_block`` bit for bit).
+    query_tok: (nq_pad,) int32, -1 padding;  cand_tok: (vb, c_pad) int32,
+      -1 padding;  cand_sizes: (vb,) logical |C|;  nq: logical |Q|.
+    Returns (vb, nq_pad, c_pad) float32, zero outside the logical block.
+    """
+    qv = table_n[jnp.clip(query_tok, 0, None)]         # (nq_pad, d)
+    tv = table_n[jnp.clip(cand_tok, 0, None)]          # (vb, c_pad, d)
+    s = jnp.clip(jnp.einsum("qd,bcd->bqc", qv, tv,
+                            preferred_element_type=jnp.float32), 0.0, 1.0)
+    q_valid = query_tok >= 0
+    t_valid = cand_tok >= 0
+    same = (query_tok[None, :, None] == cand_tok[:, None, :]) \
+        & q_valid[None, :, None] & t_valid[:, None, :]
+    s = jnp.where(same, 1.0, s)
+    w = jnp.where(s >= alpha, s, 0.0)
+    row_ok = jnp.arange(query_tok.shape[0]) < nq
+    col_ok = jnp.arange(cand_tok.shape[1])[None, :] < cand_sizes[:, None]
+    return jnp.where(row_ok[None, :, None] & col_ok[:, None, :], w, 0.0)

@@ -38,10 +38,10 @@ class SearchServer:
     of ``benchmarks/response_time.py``)."""
 
     def __init__(self, coll, sim, params: SearchParams, partitions: int,
-                 schedule: str = "overlap", bound_exchange=None):
+                 schedule: str = "overlap", bound_exchange=None, mesh=None):
         self.engine = KoiosSearch(coll, sim, params, partitions=partitions,
                                   schedule=schedule,
-                                  bound_exchange=bound_exchange)
+                                  bound_exchange=bound_exchange, mesh=mesh)
 
     def serve_batch(self, queries, batched: bool = True):
         """One batched request: list of query sets -> list of results."""
@@ -78,33 +78,45 @@ def main(argv=None):
     ap.add_argument("--per-query", action="store_true",
                     help="serve each query independently (A/B baseline for "
                          "the default fused multi-query path)")
-    ap.add_argument("--sequential", action="store_true",
-                    help="drive partitions with the sequential running-max "
-                         "loop instead of the overlapped scheduler "
-                         "(bit-identical results; A/B baseline)")
+    sched = ap.add_mutually_exclusive_group()
+    sched.add_argument("--sequential", action="store_true",
+                       help="drive partitions with the sequential "
+                            "running-max loop instead of the overlapped "
+                            "scheduler (bit-identical results; A/B "
+                            "baseline)")
+    sched.add_argument("--fused", action="store_true",
+                       help="serve with the fused on-device wave schedule "
+                            "(DESIGN.md §3) — one device program per "
+                            "partition wave; interpret mode off-TPU; "
+                            "bit-identical results")
     ap.add_argument("--mesh-bounds", action="store_true",
                     help="run the theta_lb exchange as an all-reduce-max "
                          "over a device mesh (DESIGN.md §5)")
     args = ap.parse_args(argv)
 
     bound_exchange = None
+    mesh = None
     if args.mesh_bounds:
         from ..runtime.sharding import bound_exchange_for
         from .mesh import bound_exchange_mesh
-        bound_exchange = bound_exchange_for(bound_exchange_mesh())
+        mesh = bound_exchange_mesh()
+        bound_exchange = bound_exchange_for(mesh)
 
     print(f"[serve] building corpus ({args.dataset} @ {args.scale})")
     coll = dataset_preset(args.dataset, scale=args.scale, seed=0)
     emb = make_embeddings(coll.vocab_size, dim=args.dim, seed=0)
     sim = EmbeddingTableProvider(emb)
-    params = SearchParams(k=args.k, alpha=args.alpha)
+    import jax
+    fused_mode = "auto" if jax.default_backend() == "tpu" else (
+        "interpret" if args.fused else "auto")
+    params = SearchParams(k=args.k, alpha=args.alpha, fused=fused_mode)
+    schedule = ("sequential" if args.sequential
+                else "fused" if args.fused else "overlap")
     server = SearchServer(coll, sim, params, args.partitions,
-                          schedule="sequential" if args.sequential
-                          else "overlap",
-                          bound_exchange=bound_exchange)
+                          schedule=schedule,
+                          bound_exchange=bound_exchange, mesh=mesh)
     print(f"[serve] corpus: {coll.num_sets} sets, vocab {coll.vocab_size}, "
-          f"{args.partitions} partitions, "
-          f"schedule={'sequential' if args.sequential else 'overlap'}")
+          f"{args.partitions} partitions, schedule={schedule}")
 
     queries = sample_queries(coll, args.requests, seed=1)
     for lo in range(0, len(queries), args.batch_size):
@@ -119,7 +131,9 @@ def main(argv=None):
         if st is not None and not args.per_query:
             # per-query mode runs one plan per query; engine stats hold
             # only the last plan, so the batch-level line would mislead
-            print(f"  [scheduler] tiles={st.tiles} rounds={st.rounds} "
+            print(f"  [scheduler] schedule={st.schedule} tiles={st.tiles} "
+                  f"waves={st.waves} device_rounds={st.device_rounds} "
+                  f"rounds={st.rounds} "
                   f"fused_requests={st.fused_requests} "
                   f"bound_raises={st.bound_raises} "
                   f"(backward={st.backward_raises})")

@@ -1,0 +1,48 @@
+"""Host<->device dispatch accounting (the fused-wave A/B metric).
+
+The fused wave program's whole point is eliminating host round-trips
+(DESIGN.md §3 / §8 item 6 resolution), so the benchmark needs a number
+to show for it.  ``counting()`` installs a process-local counter; every
+host->device program dispatch and device->host materialization on the
+search path calls :func:`record` with an event tag.  Outside a
+``counting()`` block recording is a no-op (one ``is None`` check — the
+hot path pays nothing).
+
+Tags follow ``<direction>:<site>``: ``h2d`` = a program dispatch,
+``d2h`` = a blocking device-to-host materialization.  The A/B in
+``benchmarks/response_time.py --fused`` reports the per-direction sums.
+"""
+from __future__ import annotations
+
+import contextlib
+from collections import Counter
+from typing import Iterator, Optional
+
+_ACTIVE: Optional[Counter] = None
+
+
+def record(event: str, n: int = 1) -> None:
+    """Count ``n`` occurrences of ``event`` if a counter is installed."""
+    if _ACTIVE is not None:
+        _ACTIVE[event] += n
+
+
+@contextlib.contextmanager
+def counting() -> Iterator[Counter]:
+    """Install a fresh dispatch counter for the enclosed block (reentrant:
+    an inner block shadows, then restores, the outer one)."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = Counter()
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = prev
+
+
+def totals(counts: Counter) -> dict:
+    """Per-direction sums plus the grand total of a counter's events."""
+    h2d = sum(v for k, v in counts.items() if k.startswith("h2d:"))
+    d2h = sum(v for k, v in counts.items() if k.startswith("d2h:"))
+    return {"h2d_dispatches": h2d, "d2h_transfers": d2h,
+            "total": h2d + d2h}

@@ -28,7 +28,7 @@ None.  Activations/batch: batch dim over (pod, data); KV caches: batch over
 from __future__ import annotations
 
 import functools
-from typing import Any, Sequence
+from typing import Any, Optional, Sequence
 
 import jax
 import numpy as np
@@ -265,6 +265,25 @@ def _amax_fn(mesh: Mesh, present: tuple):
         return v
 
     return _amax
+
+
+def all_reduce_max_traced(values, mesh: Optional[Mesh],
+                          axes: Sequence[str] = ("pod", "data")):
+    """In-trace theta_lb exchange for the fused wave program (DESIGN.md §3).
+
+    The same all-reduce-max as :func:`all_reduce_max`, but callable from
+    *inside* a jit trace (shard_map composes under jit), so the wave
+    program exchanges bounds on-device between verification rounds with
+    no host round-trip.  ``values`` stays float32 throughout — there is
+    no float64 narrowing to guard, so no round-down is needed.  With no
+    mesh (or none of the axes present) it is the identity, which keeps
+    the single-process CPU path mesh-free."""
+    if mesh is None:
+        return values
+    present = tuple(a for a in axes if a in mesh.axis_names)
+    if not present:
+        return values
+    return _amax_fn(mesh, present)(values)
 
 
 def all_reduce_max(values, mesh: Mesh, axes: Sequence[str] = ("pod", "data")):

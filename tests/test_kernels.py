@@ -6,8 +6,9 @@ import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels import (auction_topk2, auction_topk2_ref, cosine_topk,
-                           cosine_topk_ref, ssd, ssd_ref)
+from repro.kernels import (auction_topk2, auction_topk2_ref, compact_indices,
+                           compact_indices_ref, cosine_topk, cosine_topk_ref,
+                           ssd, ssd_ref)
 
 
 def _unit(rng, n, d, dtype=np.float32):
@@ -161,3 +162,62 @@ def test_flash_attention_property(seed, S, causal):
                                   jnp.asarray(v), causal=causal)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
                                atol=1e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------- compact_indices
+@pytest.mark.parametrize("n,p", [(1, 1.0), (1, 0.0), (7, 0.5), (64, 0.25),
+                                 (120, 0.9), (255, 0.0)])
+def test_compact_indices_vs_ref(n, p):
+    rng = np.random.default_rng(n)
+    mask = rng.random(n) < p
+    idx, cnt = compact_indices(mask)
+    ridx, rcnt = compact_indices_ref(jnp.asarray(mask))
+    assert np.array_equal(np.asarray(idx), np.asarray(ridx))
+    assert int(cnt) == int(rcnt) == int(mask.sum())
+    # the contract the wave program relies on: ascending survivor ids,
+    # -1 beyond the count — exactly mask.nonzero()[0]
+    assert np.array_equal(np.asarray(idx)[:int(cnt)], np.nonzero(mask)[0])
+    assert np.all(np.asarray(idx)[int(cnt):] == -1)
+
+
+def test_compact_indices_vmap_under_jit():
+    rng = np.random.default_rng(3)
+    masks = rng.random((5, 33)) < 0.4
+    f = jax.jit(jax.vmap(compact_indices))
+    idx, cnt = f(jnp.asarray(masks))
+    for b in range(len(masks)):
+        assert np.array_equal(np.asarray(idx)[b, :int(cnt[b])],
+                              np.nonzero(masks[b])[0])
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 200))
+def test_compact_indices_property(seed, n):
+    rng = np.random.default_rng(seed)
+    mask = rng.random(n) < rng.random()
+    idx, cnt = compact_indices(mask)
+    assert np.array_equal(np.asarray(idx)[:int(cnt)], np.nonzero(mask)[0])
+
+
+# ------------------------------------------- auction round kernel (fused-in)
+def test_auction_batch_kernel_parity():
+    """auction_batch(use_kernel=True) routes every bidding round's profit
+    top-2 through the Pallas kernel (the fused-wave TPU path); brackets
+    must match the inline jnp pass bit for bit (same tie-breaking)."""
+    from repro.core.matching.auction import auction_batch, make_eps_schedule
+    rng = np.random.default_rng(0)
+    B, N, M = 3, 4, 12
+    w = np.where(rng.random((B, N, M)) > 0.5, rng.random((B, N, M)), 0.0)
+    w = w.astype(np.float32)
+    nq = np.array([4, 3, 2], np.int32)
+    nc = np.array([12, 7, 12], np.int32)
+    eps = make_eps_schedule(1e-4)
+    ref_res = auction_batch(jnp.asarray(w), jnp.asarray(nq),
+                            jnp.asarray(nc), eps, jnp.float32(-1e30))
+    ker_res = auction_batch(jnp.asarray(w), jnp.asarray(nq),
+                            jnp.asarray(nc), eps, jnp.float32(-1e30),
+                            use_kernel=True)
+    assert np.array_equal(np.asarray(ref_res.lb), np.asarray(ker_res.lb))
+    assert np.array_equal(np.asarray(ref_res.ub), np.asarray(ker_res.ub))
+    assert np.array_equal(np.asarray(ref_res.assign),
+                          np.asarray(ker_res.assign))

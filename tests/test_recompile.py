@@ -1,0 +1,103 @@
+"""Jit-recompilation guards: DESIGN.md §2 promises that pow2 padding
+everywhere (chunk counts, bitmask words, solver batches, wave shapes)
+bounds the number of compiled program variants to O(log shape).  These
+tests sweep input sizes across orders of magnitude and count the actual
+jit cache growth."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import EmbeddingSimilarity, KoiosSearch, SearchParams
+from repro.core.refinement import _run_refinement, run_refinement
+from repro.core.token_stream import EventStream
+from repro.data import make_collection, make_embeddings, sample_queries
+
+
+def _synthetic_events(rng, n_events: int, num_sets: int, nq: int,
+                      total_slots: int) -> EventStream:
+    sim = np.sort(rng.random(n_events).astype(np.float32))[::-1]
+    return EventStream(
+        set_id=rng.integers(0, num_sets, n_events).astype(np.int32),
+        q_pos=rng.integers(0, nq, n_events).astype(np.int32),
+        slot=rng.integers(0, total_slots, n_events).astype(np.int64),
+        sim=sim, n_tuples=n_events)
+
+
+def test_refinement_variants_log_in_stream_length():
+    """Stream lengths across 3 orders of magnitude compile O(log) scan
+    variants (pow2-padded chunk counts)."""
+    rng = np.random.default_rng(0)
+    num_sets, nq, total_slots, chunk = 50, 8, 400, 64
+    sizes = rng.integers(2, 12, num_sets).astype(np.int64)
+    sizes = np.minimum(sizes, total_slots // num_sets)
+    before = _run_refinement._cache_size()
+    lengths = [1, 3, 7, 20, 55, 130, 300, 701, 1500, 2500]
+    for L in lengths:
+        ev = _synthetic_events(rng, L, num_sets, nq, total_slots)
+        run_refinement(ev, sizes.astype(np.int32), nq, total_slots,
+                       k=5, alpha=0.8, chunk_size=chunk)
+    variants = _run_refinement._cache_size() - before
+    max_chunks = -(-max(lengths) // chunk)
+    bound = math.ceil(math.log2(max_chunks)) + 2   # pow2 chunk counts
+    assert variants <= bound, (variants, bound)
+
+
+def test_engine_sweep_compiles_olog(small_world):
+    """End-to-end: a sweep of query cardinalities (and thus stream/solver
+    shapes) through the engine stays within an O(log) compile budget for
+    the refinement scan and both solver entry points."""
+    from repro.core.matching.auction import auction_batch
+    from repro.core.matching.hungarian import hungarian_batch
+
+    coll, sim = small_world
+    params = SearchParams(k=5, alpha=0.8, chunk_size=64, verify_batch=8,
+                          verifier="hybrid")
+    engine = KoiosSearch(coll, sim, params, partitions=2)
+    rng = np.random.default_rng(2)
+    sweep = [1, 2, 3, 5, 8, 11, 16, 23, 32]
+    queries = [np.asarray(rng.choice(coll.vocab_size, size=nq,
+                                     replace=False), np.int32)
+               for nq in sweep]
+    before = (_run_refinement._cache_size(),
+              auction_batch._cache_size(), hungarian_batch._cache_size())
+    for q in queries:
+        engine.search(q, schedule="overlap")
+    grew = (_run_refinement._cache_size() - before[0],
+            auction_batch._cache_size() - before[1],
+            hungarian_batch._cache_size() - before[2])
+    # 9 distinct |Q| values with streams spanning ~2 orders of magnitude.
+    # Every padded dim is pow2, so variant counts are bounded by products
+    # of log factors (nq_pad in {8,16,32} x c_pad in {8,16,32} at this
+    # scale), never by the number of distinct logical shapes seen.
+    assert grew[0] <= math.ceil(math.log2(1 + 2500 // 64)) + 2, grew
+    assert grew[1] <= 3 * 3 + 1, grew          # (nq_pad x c_pad) grid
+    assert grew[2] <= 3 * 3 + 1, grew
+    # the actual recompile guard: a second identical sweep compiles NOTHING
+    mid = (_run_refinement._cache_size(),
+           auction_batch._cache_size(), hungarian_batch._cache_size())
+    for q in queries:
+        engine.search(q, schedule="overlap")
+    assert (_run_refinement._cache_size(),
+            auction_batch._cache_size(),
+            hungarian_batch._cache_size()) == mid
+
+
+def test_fused_wave_variants_shared_across_batches(small_world):
+    """The wave program's static config depends only on pow2-padded
+    shapes: rerunning the fused schedule with a different batch of the
+    same padded size must not recompile."""
+    from repro.core.wave import _wave_fn
+
+    coll, sim = small_world
+    params = SearchParams(k=5, alpha=0.8, chunk_size=64, verify_batch=8,
+                          fused="interpret")
+    engine = KoiosSearch(coll, sim, params, partitions=2)
+    q1 = sample_queries(coll, 3, seed=1)
+    q2 = sample_queries(coll, 3, seed=2)
+    engine.search_batch(q1, schedule="fused")
+    n_fns = _wave_fn.cache_info().currsize
+    engine.search_batch(q1, schedule="fused")       # same shapes: no growth
+    assert _wave_fn.cache_info().currsize == n_fns
+    engine.search_batch(q2, schedule="fused")       # new batch: pow2 reuse
+    assert _wave_fn.cache_info().currsize <= n_fns + 2

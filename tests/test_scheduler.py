@@ -1,6 +1,8 @@
 """Partition scheduler: overlapped execution is bit-identical to the
-sequential partition loop, theta_lb is monotone over scheduler steps, and
-the mesh bound exchange changes nothing."""
+sequential partition loop, the fused on-device wave schedule is
+bit-identical to both (across partitions x batch x verifier modes), theta_lb
+is monotone over scheduler steps, and the mesh bound exchange changes
+nothing."""
 import dataclasses
 
 import numpy as np
@@ -8,7 +10,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (EmbeddingSimilarity, ExecutionPlan, KoiosSearch,
-                        SearchParams, run_plan)
+                        SearchParams, partition_ranges, run_plan)
 from repro.data import make_collection, make_embeddings, sample_queries
 
 
@@ -32,6 +34,102 @@ def test_overlap_matches_sequential_bitwise(small_world, verifier,
         assert np.array_equal(a.ids, b.ids)
         assert np.array_equal(a.lb, b.lb)          # bit-identical floats
         assert np.array_equal(a.ub, b.ub)
+
+
+@pytest.mark.parametrize("verifier", ["hungarian", "auction", "hybrid"])
+@pytest.mark.parametrize("partitions", [1, 2, 4])
+@pytest.mark.parametrize("batch", [1, 8])
+def test_fused_matches_overlap_and_sequential_bitwise(small_world, verifier,
+                                                      partitions, batch):
+    """The PR-3 tentpole guarantee: the fused on-device wave schedule
+    (refinement chunk scans + compaction + the first R verification
+    rounds as ONE device program per partition wave, interpret mode on
+    CPU) returns the same ids and the same lb/ub floats as both host
+    schedules."""
+    coll, sim = small_world
+    params = SearchParams(k=5, alpha=0.8, chunk_size=64, verify_batch=8,
+                          verifier=verifier, fused="interpret")
+    engine = KoiosSearch(coll, sim, params, partitions=partitions)
+    queries = sample_queries(coll, batch, seed=5)
+    seq = engine.search_batch(queries, schedule="sequential")
+    ovl = engine.search_batch(queries, schedule="overlap")
+    fus = engine.search_batch(queries, schedule="fused")
+    st = engine.scheduler_stats
+    assert st.schedule == "fused"          # really took the wave path
+    assert st.waves == partitions
+    for a, b, c in zip(seq, ovl, fus):
+        assert np.array_equal(a.ids, c.ids)
+        assert np.array_equal(a.lb, c.lb)          # bit-identical floats
+        assert np.array_equal(a.ub, c.ub)
+        assert np.array_equal(b.ids, c.ids)
+        assert np.array_equal(b.lb, c.lb)
+        assert np.array_equal(b.ub, c.ub)
+
+
+def test_fused_falls_back_to_overlap_off_tpu(small_world):
+    """Without the interpret opt-in the fused schedule must resolve to
+    overlap on a CPU backend (and still return exact results)."""
+    coll, sim = small_world
+    params = SearchParams(k=5, alpha=0.8, chunk_size=64, verify_batch=8)
+    engine = KoiosSearch(coll, sim, params, partitions=2)   # schedule=fused
+    q = sample_queries(coll, 1, seed=9)[0]
+    r_fused = engine.search(q)
+    assert engine.scheduler_stats.schedule == "overlap"
+    assert engine.scheduler_stats.waves == 0
+    r_seq = engine.search(q, schedule="sequential")
+    assert np.array_equal(r_fused.ids, r_seq.ids)
+    assert np.array_equal(r_fused.lb, r_seq.lb)
+
+
+def test_fused_with_mesh_exchange_identical(small_world):
+    """The fused schedule with the on-device all-reduce-max bound exchange
+    (single-device mesh: identity) changes no result."""
+    from repro.launch.mesh import bound_exchange_mesh
+    from repro.runtime.sharding import bound_exchange_for
+
+    coll, sim = small_world
+    mesh = bound_exchange_mesh()
+    params = SearchParams(k=5, alpha=0.8, chunk_size=64, verify_batch=8,
+                          fused="interpret")
+    host = KoiosSearch(coll, sim, params, partitions=4)
+    meshed = KoiosSearch(coll, sim, params, partitions=4, mesh=mesh,
+                         bound_exchange=bound_exchange_for(mesh))
+    queries = sample_queries(coll, 3, seed=41)
+    for a, b in zip(host.search_batch(queries, schedule="fused"),
+                    meshed.search_batch(queries, schedule="fused")):
+        assert np.array_equal(a.ids, b.ids)
+        assert np.array_equal(a.lb, b.lb)
+
+
+@pytest.mark.parametrize("partitions", [2, 4])
+def test_token_balanced_partitioning(small_world, partitions):
+    """Size-balanced (token-count) partitioning (DESIGN.md §8 item 5,
+    resolved): identical top-k to the linspace set-range split, and every
+    partition's token count within 10% of the ideal share."""
+    coll, sim = small_world
+    sizes = coll.set_sizes
+    bounds = partition_ranges(sizes, partitions, by="tokens")
+    assert bounds[0] == 0 and bounds[-1] == coll.num_sets
+    assert np.all(np.diff(bounds) > 0)             # non-empty partitions
+    tokens = np.array([sizes[lo:hi].sum()
+                       for lo, hi in zip(bounds[:-1], bounds[1:])])
+    ideal = coll.total_tokens / partitions
+    assert tokens.max() <= 1.1 * ideal, (tokens, ideal)
+
+    # token-skewed repository: one huge set drags every greedy cut right;
+    # the forward+backward passes must still yield non-empty partitions
+    skewed = partition_ranges(np.array([1, 1, 1, 100]), 4, by="tokens")
+    assert np.array_equal(skewed, [0, 1, 2, 3, 4])
+
+    params = SearchParams(k=5, alpha=0.8, chunk_size=64, verify_batch=8)
+    by_sets = KoiosSearch(coll, sim, params, partitions=partitions)
+    by_tokens = KoiosSearch(coll, sim, params, partitions=partitions,
+                            partition_by="tokens")
+    queries = sample_queries(coll, 4, seed=13)
+    for a, b in zip(by_sets.search_batch(queries),
+                    by_tokens.search_batch(queries)):
+        assert np.array_equal(a.ids, b.ids)
+        assert np.array_equal(a.lb, b.lb)
 
 
 def test_search_is_search_batch_is_the_scheduler(small_world):

@@ -68,3 +68,41 @@ def test_pad_events_pow2(small_world):
     assert np.all(flat[len(ev):] == -1)            # padding sentinel
     # padded sims keep the stream's final value (valid s_now)
     assert np.all(si.reshape(-1)[len(ev):] == ev.sim[-1])
+
+
+def test_kernel_stream_parity(small_world):
+    """``use_kernel=True`` routes the stream sweep through the
+    ``cosine_topk`` Pallas kernel (interpret mode on CPU); the resulting
+    streams must be bit-identical to the jnp provider path — same tuples,
+    same values, same order (admission order is load-bearing)."""
+    from repro.core.token_stream import build_token_stream_batch
+
+    coll, sim = small_world
+    queries = sample_queries(coll, 4, seed=5)
+    for alpha in (0.8, 0.95):
+        provider = build_token_stream_batch(queries, sim, alpha)
+        kernel = build_token_stream_batch(queries, sim, alpha,
+                                          use_kernel=True)
+        for a, b in zip(provider, kernel):
+            assert np.array_equal(a.q_pos, b.q_pos)
+            assert np.array_equal(a.token, b.token)
+            assert np.array_equal(a.sim, b.sim)
+
+
+def test_kernel_stream_end_to_end(small_world):
+    """A full engine run with ``stream_use_kernel`` returns bit-identical
+    results (the stream feeds every downstream bound)."""
+    from repro.core import KoiosSearch, SearchParams
+
+    coll, sim = small_world
+    queries = sample_queries(coll, 3, seed=17)
+    base = KoiosSearch(coll, sim, SearchParams(k=5, alpha=0.8, chunk_size=64,
+                                               verify_batch=8), partitions=2)
+    kern = KoiosSearch(coll, sim, SearchParams(k=5, alpha=0.8, chunk_size=64,
+                                               verify_batch=8,
+                                               stream_use_kernel=True),
+                       partitions=2)
+    for a, b in zip(base.search_batch(queries), kern.search_batch(queries)):
+        assert np.array_equal(a.ids, b.ids)
+        assert np.array_equal(a.lb, b.lb)
+        assert np.array_equal(a.ub, b.ub)
