@@ -25,9 +25,19 @@ with ``repro.runtime.instrument`` and asserting bit-identical results:
 
     PYTHONPATH=src python -m benchmarks.response_time --fused --partitions 4
 
-Every A/B invocation also writes ``BENCH_response_time.json`` (per-mode
-latencies + a hash of the results) so CI accumulates the perf trajectory
-as an artifact; ``--json ''`` disables.
+Request-engine A/B (``--engine``): replays a staggered-arrival trace
+through the continuous-batching engine (admission queue, mid-flight
+joins, LRU stream cache — DESIGN.md §3.2) against the per-batch serving
+loop that waits for each fixed batch to fill, comparing TRUE mean
+per-request (admit->respond) latency and asserting hash-identical
+results:
+
+    PYTHONPATH=src python -m benchmarks.response_time --engine --partitions 4
+
+Every A/B invocation also merges its record into
+``BENCH_response_time.json`` under ``records[<mode>]`` (per-mode
+latencies + a hash of the results) so CI accumulates the perf
+trajectory of every mode as one artifact; ``--json ''`` disables.
 """
 from __future__ import annotations
 
@@ -252,13 +262,128 @@ def run_fused_ab(dataset="opendata", partitions=4, batch_size=8, k=10,
     }
 
 
-def write_bench_json(payload: dict, path: str) -> None:
-    """BENCH_response_time.json — the perf-trajectory artifact CI uploads."""
+def run_engine_ab(dataset="opendata", partitions=4, batch_size=8,
+                  n_requests=16, unique=8, stagger_ms=25.0, k=10,
+                  alpha=0.8, verifier="hungarian", repeats=3):
+    """Continuous-batching engine vs the per-batch serving loop under a
+    staggered-arrival trace.
+
+    Both arms see the same trace: request i arrives ``stagger_ms`` after
+    request i-1, and requests repeat each of ``unique`` distinct queries
+    (the stream-cache story).  The baseline is the pre-engine serving
+    loop — wait until a fixed ``batch_size`` batch has fully arrived,
+    run it one-shot, repeat — so every request's latency includes its
+    wait for the batch to fill.  The engine admits each request on
+    arrival and coalesces whatever is queued into the next wave
+    (mid-flight joins).  Mean per-request (admit->respond) latency is
+    the headline; results are asserted hash-identical across both arms
+    and the warmed one-shot reference."""
+    import time as _time
+
+    from repro.core import KoiosSearch
+    from repro.runtime.engine import RequestEngine
+
+    params = SearchParams(k=k, alpha=alpha, verifier=verifier)
+    coll, sim = world(dataset)
+    one_shot = KoiosSearch(coll, sim, params, partitions=partitions)
+    indexes = one_shot.partitions       # engines reuse the same indexes
+
+    base = sample_queries(coll, unique, seed=11)
+    reqs = [base[i % unique] for i in range(n_requests)]
+    stagger = stagger_ms / 1e3
+
+    # Warm both paths' jit caches and pin the reference results.  The
+    # engine's steady-state shapes depend on cohort size (pow2-padded
+    # solver rows), so warm every pow2 cohort the staggered trace can
+    # coalesce — after this, the sweep itself compiles nothing
+    # (tests/test_recompile.py asserts the same invariant).
+    ref = one_shot.search_batch(reqs, schedule="overlap")
+    warm_engine = RequestEngine(coll, sim, params, indexes=indexes)
+    warm_engine.warmup(reqs)
+    for r, a in zip(warm_engine.serve(reqs), ref):
+        assert np.array_equal(r.result.ids, a.ids) \
+            and np.array_equal(r.result.lb, a.lb), \
+            "engine diverged from the one-shot path"
+    ref_hash = result_hash(ref)
+
+    def engine_run():
+        eng = RequestEngine(coll, sim, params, indexes=indexes)
+        t0 = eng.clock()
+        for i, q in enumerate(reqs):
+            eng.submit(q, arrival=t0 + i * stagger)
+        resp = sorted(eng.drain(), key=lambda r: r.rid)
+        return eng, [r.result for r in resp], [r.latency_s for r in resp]
+
+    def loop_run():
+        results, lats = [], []
+        t0 = _time.monotonic()
+        arrivals = [i * stagger for i in range(n_requests)]
+        for lo in range(0, n_requests, batch_size):
+            hi = min(lo + batch_size, n_requests)
+            wait = (t0 + arrivals[hi - 1]) - _time.monotonic()
+            if wait > 0:                 # batch waits for its last member
+                _time.sleep(wait)
+            rs = one_shot.search_batch(reqs[lo:hi], schedule="overlap")
+            t_done = _time.monotonic()
+            results.extend(rs)
+            lats.extend(t_done - (t0 + arrivals[i])
+                        for i in range(lo, hi))
+        return results, lats
+
+    eng_means, loop_means = [], []
+    eng = None
+    for _ in range(repeats):
+        eng, eng_results, eng_lats = engine_run()
+        loop_results, loop_lats = loop_run()
+        assert result_hash(eng_results) == ref_hash, \
+            "engine results diverged under the staggered trace"
+        assert result_hash(loop_results) == ref_hash
+        eng_means.append(sum(eng_lats) / len(eng_lats))
+        loop_means.append(sum(loop_lats) / len(loop_lats))
+    t_eng, t_loop = min(eng_means), min(loop_means)
+    summary = eng.summary()
+    return {
+        "dataset": dataset, "partitions": partitions,
+        "batch_size": batch_size, "n_requests": n_requests,
+        "unique_queries": unique, "stagger_ms": stagger_ms,
+        "verifier": verifier,
+        "engine_s": t_eng, "batch_loop_s": t_loop,
+        "speedup": t_loop / t_eng if t_eng else float("inf"),
+        "cache_hit_rate": summary["stream_cache"]["hit_rate"],
+        "mean_queue_depth": summary["mean_queue_depth"],
+        "engine_waves": summary["scheduler"]["waves"],
+        "result_hash": ref_hash,
+        "identical_topk": True,
+    }
+
+
+def write_bench_json(record: dict, path: str, mode: str) -> None:
+    """BENCH_response_time.json — the perf-trajectory artifact CI uploads.
+
+    One document keyed by mode: each A/B invocation merges its record
+    under ``records[mode]`` instead of clobbering the file, so the
+    trajectory of every mode (``batched_ab``/``partition_ab``/
+    ``fused_ab``/``engine_ab``/``suite``) stays comparable across PRs.
+    Legacy single-mode documents are migrated on first merge."""
     if not path:
         return
+    doc = {"benchmark": "response_time", "records": {}}
+    try:
+        with open(path) as f:
+            prev = json.load(f)
+        if "records" in prev:
+            doc["records"] = prev["records"]
+        elif prev.get("mode"):           # legacy single-mode layout
+            legacy = {k: v for k, v in prev.items()
+                      if k not in ("benchmark", "mode")}
+            doc["records"][prev["mode"]] = legacy
+    except (OSError, ValueError):
+        pass
+    doc["records"][mode] = record
     with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
-    print(f"[bench] wrote {path}")
+        json.dump(doc, f, indent=2, sort_keys=True)
+    print(f"[bench] wrote {path} (mode={mode}, "
+          f"{len(doc['records'])} records)")
 
 
 def main(argv=None):
@@ -275,6 +400,11 @@ def main(argv=None):
                       help="A/B the fused on-device wave schedule vs the "
                            "overlap schedule (use --partitions; interpret "
                            "mode off-TPU)")
+    mode.add_argument("--engine", action="store_true",
+                      help="A/B the continuous-batching request engine vs "
+                           "the per-batch serving loop under a staggered-"
+                           "arrival trace (true per-request latencies, "
+                           "stream-cache hit rate)")
     ap.add_argument("--dataset", default=None,
                     help="restrict to one dataset (A/B default: opendata; "
                          "table mode default: all four)")
@@ -282,6 +412,10 @@ def main(argv=None):
                     help="A/B modes only")
     ap.add_argument("--partitions", type=int, default=4,
                     help="--overlap A/B only: repository partition count")
+    ap.add_argument("--n-requests", type=int, default=16,
+                    help="--engine A/B only: trace length")
+    ap.add_argument("--stagger-ms", type=float, default=25.0,
+                    help="--engine A/B only: inter-arrival gap")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--verifier", default="hungarian",
                     choices=["hungarian", "auction", "hybrid"],
@@ -289,6 +423,28 @@ def main(argv=None):
     ap.add_argument("--json", default="BENCH_response_time.json",
                     help="perf-artifact path for A/B modes ('' disables)")
     args = ap.parse_args(argv)
+
+    if args.engine:
+        r = run_engine_ab(args.dataset or "opendata", args.partitions,
+                          args.batch_size, n_requests=args.n_requests,
+                          stagger_ms=args.stagger_ms, k=args.k,
+                          verifier=args.verifier)
+        print("dataset,mode,partitions,n_requests,stagger_ms,"
+              "mean_latency_per_request_s,speedup_vs_batch_loop,"
+              "cache_hit_rate,mean_queue_depth,result_hash,identical_topk")
+        for name, lat, sp in (
+                ("engine", r["engine_s"], r["speedup"]),
+                ("batch-loop", r["batch_loop_s"], 1.0)):
+            print(f"{r['dataset']},{name},{r['partitions']},"
+                  f"{r['n_requests']},{r['stagger_ms']},{lat:.4f},"
+                  f"{sp:.2f},{r['cache_hit_rate']:.2f},"
+                  f"{r['mean_queue_depth']:.1f},{r['result_hash']},"
+                  f"{r['identical_topk']}")
+        write_bench_json(r, args.json, "engine_ab")
+        assert r["engine_s"] < r["batch_loop_s"], \
+            "engine must beat the per-batch loop on mean latency " \
+            "under a staggered trace"
+        return 0
 
     if args.fused:
         r = run_fused_ab(args.dataset or "opendata", args.partitions,
@@ -306,7 +462,6 @@ def main(argv=None):
                   f"{r['waves']},{r['device_rounds']},"
                   f"{r['result_hash']},{r['identical_topk']}")
         write_bench_json({
-            "benchmark": "response_time", "mode": "fused_ab",
             "modes": {
                 "fused": {"mean_latency_per_query_s": r["fused_s"],
                           "transfers": r["fused_transfers"]},
@@ -316,7 +471,7 @@ def main(argv=None):
             "speedup": r["speedup"], "result_hash": r["result_hash"],
             "dataset": r["dataset"], "partitions": r["partitions"],
             "batch_size": r["batch_size"], "verifier": r["verifier"],
-        }, args.json)
+        }, args.json, "fused_ab")
         assert r["fused_transfers"] < r["overlap_transfers"], \
             "fused wave must reduce host<->device transfers"
         return 0
@@ -335,7 +490,6 @@ def main(argv=None):
                   f"{r['bound_raises']},{r['backward_raises']},"
                   f"{r['identical_topk']}")
         write_bench_json({
-            "benchmark": "response_time", "mode": "partition_ab",
             "modes": {
                 "overlap": {"mean_latency_per_query_s": r["overlap_s"]},
                 "sequential": {
@@ -344,7 +498,7 @@ def main(argv=None):
             "speedup": r["speedup"], "result_hash": r["result_hash"],
             "dataset": r["dataset"], "partitions": r["partitions"],
             "batch_size": r["batch_size"], "verifier": r["verifier"],
-        }, args.json)
+        }, args.json, "partition_ab")
         return 0
 
     if args.batched or args.per_query:
@@ -360,7 +514,6 @@ def main(argv=None):
             print(f"{r['dataset']},{mode_name},{r['batch_size']},"
                   f"{lat:.4f},{sp:.2f},{r['identical_topk']}")
         write_bench_json({
-            "benchmark": "response_time", "mode": "batched_ab",
             "modes": {
                 "batched": {"mean_latency_per_query_s": r["batched_s"]},
                 "per_query": {
@@ -369,7 +522,7 @@ def main(argv=None):
             "speedup": r["speedup"], "result_hash": r["result_hash"],
             "dataset": r["dataset"], "batch_size": r["batch_size"],
             "verifier": r["verifier"],
-        }, args.json)
+        }, args.json, "batched_ab")
         return 0
 
     table_kw = {"k": args.k}

@@ -74,10 +74,20 @@ def main(argv=None) -> None:
               f"{rf['fused_s']:.4f},{rf['speedup']:.2f},"
               f"{rf['overlap_transfers']},{rf['fused_transfers']},"
               f"{rf['result_hash']}")
+        _banner("Request engine: continuous batching vs per-batch loop")
+        print("dataset,partitions,batch_loop_s,engine_s,speedup,"
+              "cache_hit_rate,mean_queue_depth")
+        re_ = response_time.run_engine_ab(
+            partitions=4, batch_size=4 if args.fast else 8,
+            n_requests=8 if args.fast else 16,
+            stagger_ms=10.0 if args.fast else 25.0)
+        print(f"{re_['dataset']},{re_['partitions']},"
+              f"{re_['batch_loop_s']:.4f},{re_['engine_s']:.4f},"
+              f"{re_['speedup']:.2f},{re_['cache_hit_rate']:.2f},"
+              f"{re_['mean_queue_depth']:.1f}")
         response_time.write_bench_json({
-            "benchmark": "response_time", "mode": "suite",
-            "partition_ab": r, "fused_ab": rf,
-        }, "BENCH_response_time.json")
+            "partition_ab": r, "fused_ab": rf, "engine_ab": re_,
+        }, "BENCH_response_time.json", "suite")
         if not args.fast:
             _banner("SilkMoth-mode (char n-gram similarity, §VIII-B)")
             for r in response_time.run(datasets=("opendata",),

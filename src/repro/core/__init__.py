@@ -9,19 +9,25 @@ Public API:
 from .types import SetCollection, SearchParams, SearchResult, SearchStats
 from .similarity import EmbeddingSimilarity, NGramJaccardSimilarity
 from .inverted_index import InvertedIndex
-from .token_stream import (build_token_stream, build_token_stream_batch,
-                           expand_to_events)
-from .scheduler import ExecutionPlan, SchedulerStats, run_plan
-from .search import (KoiosSearch, KoiosIndex, partition_ranges,
-                     search_partition, search_partition_batch, merge_topk)
+from .token_stream import (TokenStreamCache, build_token_stream,
+                           build_token_stream_batch,
+                           build_token_stream_batch_cached, expand_to_events)
+from .scheduler import (ExecutionPlan, SchedulerStats, run_plan,
+                        run_fused_wave, run_wave)
+from .search import (KoiosSearch, KoiosIndex, build_partition_indexes,
+                     partition_ranges, search_partition,
+                     search_partition_batch, merge_topk)
 from .baseline import baseline_topk, baseline_plus_topk, brute_force_topk
 
 __all__ = [
     "SetCollection", "SearchParams", "SearchResult", "SearchStats",
     "EmbeddingSimilarity", "NGramJaccardSimilarity", "InvertedIndex",
-    "build_token_stream", "build_token_stream_batch", "expand_to_events",
-    "ExecutionPlan", "SchedulerStats", "run_plan",
-    "KoiosSearch", "KoiosIndex", "partition_ranges", "search_partition",
-    "search_partition_batch", "merge_topk",
+    "TokenStreamCache", "build_token_stream", "build_token_stream_batch",
+    "build_token_stream_batch_cached", "expand_to_events",
+    "ExecutionPlan", "SchedulerStats", "run_plan", "run_fused_wave",
+    "run_wave",
+    "KoiosSearch", "KoiosIndex", "build_partition_indexes",
+    "partition_ranges", "search_partition", "search_partition_batch",
+    "merge_topk",
     "baseline_topk", "baseline_plus_topk", "brute_force_topk",
 ]

@@ -38,15 +38,14 @@ import jax.numpy as jnp
 
 from .matching.auction import auction_batch, make_eps_schedule
 from .matching.hungarian import hungarian_batch
-from .types import SearchParams, SearchResult, SearchStats, SetCollection
+from .types import (SearchParams, SearchResult, SearchStats, SetCollection,
+                    pad_ids_pow2, pow2)
 from ..runtime import instrument
 
 
 def _pad_pow2(n: int, lo: int = 8) -> int:
-    p = lo
-    while p < n:
-        p *= 2
-    return p
+    """Solver-batch bucket rounding (shared pow2 with an 8 floor)."""
+    return pow2(n, lo)
 
 
 def _kth(x: np.ndarray, mask: np.ndarray, kk: int) -> float:
@@ -139,9 +138,21 @@ class VerifierPool:
         q_cat = np.concatenate([np.asarray(r.query, np.int32)
                                 for r in requests])
         c_cat = np.concatenate([t for ts in toks for t in ts])
+        # pow2 row/col buckets: the fused pairwise shape is otherwise a
+        # function of the round's request mix, and steady-state serving
+        # (arbitrary cohort coalitions) would compile a fresh program per
+        # composition.  Rows/cols of the similarity are independent
+        # (row-wise normalize, per-pair dots), so pad entries change no
+        # retained value — the slice drops them before use.
+        # coarse floors (32 rows / 256 cols) keep the whole bucket grid
+        # small enough to warm at engine startup; the extra pad work is
+        # one tiny matmul block
+        q_in = pad_ids_pow2(q_cat, lo=32)
+        c_in = pad_ids_pow2(c_cat, lo=256)
         instrument.record("h2d:pairwise_dispatch")
         instrument.record("d2h:weights_materialize")
-        s = np.asarray(self.sim.pairwise(q_cat, c_cat))
+        s = np.asarray(self.sim.pairwise(q_in, c_in))[:len(q_cat),
+                                                      :len(c_cat)]
         s = np.where(s >= self.params.alpha, s, 0.0).astype(np.float32)
         out = []
         for ri, ts in enumerate(toks):

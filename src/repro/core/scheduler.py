@@ -48,6 +48,19 @@ from .types import (SearchParams, SearchResult, SearchStats, SetCollection)
 from ..runtime import instrument
 
 
+def _build_streams(plan: "ExecutionPlan", sim, params: SearchParams,
+                   streams) -> list:
+    """Plan-wide per-query streams: the precomputed list when the caller
+    (request engine / stream-cache-aware search) supplies one, else one
+    stacked batch build — construction is split from execution so streams
+    can come from the LRU cache (DESIGN.md §3.2)."""
+    if streams is not None:
+        assert len(streams) == len(plan.queries)
+        return streams
+    return build_token_stream_batch(plan.queries, sim, params.alpha,
+                                    use_kernel=params.stream_use_kernel)
+
+
 @dataclasses.dataclass
 class SchedulerStats:
     """Instrumentation of one plan execution (the overlap/fused story)."""
@@ -58,7 +71,8 @@ class SchedulerStats:
     bound_raises: int = 0          # tile thetas raised by another tile
     backward_raises: int = 0       # ... where the source is a LATER partition
     schedule: str = ""             # resolved drive order of this plan
-    waves: int = 0                 # fused wave programs dispatched
+    waves: int = 0                 # waves executed (fused device programs
+    #                                or the engine's host wave steps)
     device_rounds: int = 0         # verification rounds run inside waves
     theta_trace: List[np.ndarray] = dataclasses.field(default_factory=list)
     # per-query theta_lb after each round (monotone non-decreasing rows)
@@ -112,13 +126,48 @@ class ExecutionPlan:
             np.float64)
         bases = (request_id_bases if request_id_bases is not None
                  else [ix.id_offset for ix in self.indexes])
+        self._bases = [int(b) for b in bases]
         self.tiles = [
-            _Tile(qi=qi, pi=pi, index=index, id_base=int(bases[pi]))
+            _Tile(qi=qi, pi=pi, index=index, id_base=self._bases[pi])
             for pi, index in enumerate(self.indexes)
             for qi in range(len(self.queries))]
         self.stats = SchedulerStats(tiles=len(self.tiles))
 
     # ------------------------------------------------------------- helpers
+    def add_queries(self, queries: Sequence[np.ndarray],
+                    theta0: Optional[Sequence[float]] = None
+                    ) -> "tuple[range, List[_Tile]]":
+        """Absorb late-arriving queries into the plan (continuous
+        batching, DESIGN.md §3.2): appends the queries plus one tile per
+        partition each, and returns their query-index range and the new
+        tiles.  Sound mid-flight: a query's tiles only ever read its own
+        theta entry, and row-level numerics are schedule-invariant, so
+        joining between waves cannot perturb any in-flight query."""
+        queries = [np.asarray(q, dtype=np.int32) for q in queries]
+        lo = len(self.queries)
+        self.queries.extend(queries)
+        extra = np.asarray(
+            theta0 if theta0 is not None else [0.0] * len(queries),
+            np.float64)
+        assert len(extra) == len(queries)
+        self.theta0 = np.concatenate([self.theta0, extra])
+        new = [_Tile(qi=qi, pi=pi, index=index, id_base=self._bases[pi])
+               for pi, index in enumerate(self.indexes)
+               for qi in range(lo, len(self.queries))]
+        self.tiles.extend(new)
+        self.stats.tiles = len(self.tiles)
+        return range(lo, len(self.queries)), new
+
+    def retire_tiles(self, qis) -> None:
+        """Drop responded queries' tiles (and query arrays) so a
+        long-running engine plan does not accumulate finished work; their
+        queries list slots are tombstoned (never touched again — tiles
+        are gone)."""
+        gone = set(int(qi) for qi in qis)
+        self.tiles = [t for t in self.tiles if t.qi not in gone]
+        for qi in gone:
+            self.queries[qi] = None
+
     def results(self) -> List[List[SearchResult]]:
         """Per-query, per-partition (partition-ascending) local results."""
         out: List[List[SearchResult]] = [[] for _ in self.queries]
@@ -169,7 +218,7 @@ def _finish_tile(tile: _Tile, id_offset: int) -> None:
 def run_plan(plan: ExecutionPlan, sim_provider, params: SearchParams,
              schedule: str = "overlap",
              bound_exchange: Optional[Callable] = None,
-             mesh=None) -> List[List[SearchResult]]:
+             mesh=None, streams=None) -> List[List[SearchResult]]:
     """Drive every tile of ``plan`` to completion; returns per-query lists
     of per-partition results (partition order), ids already globalized.
 
@@ -179,63 +228,88 @@ def run_plan(plan: ExecutionPlan, sim_provider, params: SearchParams,
     ``core.wave.fused_available``) and falls back to ``overlap``
     elsewhere; all three schedules return bit-identical exact results.
     ``mesh`` plugs the repository-shard mesh into the fused program's
-    on-device bound exchange (DESIGN.md §5)."""
+    on-device bound exchange (DESIGN.md §5).  ``streams`` optionally
+    supplies precomputed per-query token streams (the stream-cache path,
+    DESIGN.md §3.2) instead of building them here."""
     if schedule == "fused":
         from .wave import fused_available
         if not fused_available(params, sim_provider):
             schedule = "overlap"
     plan.stats.schedule = schedule
     if schedule == "fused":
-        _run_fused(plan, sim_provider, params, bound_exchange, mesh)
+        _run_fused(plan, sim_provider, params, bound_exchange, mesh,
+                   streams=streams)
     elif schedule == "overlap":
-        _run_overlapped(plan, sim_provider, params, bound_exchange)
+        _run_overlapped(plan, sim_provider, params, bound_exchange,
+                        streams=streams)
     elif schedule == "sequential":
-        _run_sequential(plan, sim_provider, params, bound_exchange)
+        _run_sequential(plan, sim_provider, params, bound_exchange,
+                        streams=streams)
     else:
         raise ValueError(f"unknown schedule {schedule!r}")
     return plan.results()
 
 
+# --------------------------------------------------------------- wave step
+def run_wave(plan: ExecutionPlan, tiles: Sequence[_Tile], streams,
+             theta, pool: VerifierPool, params: SearchParams) -> None:
+    """Execute one host *wave* — any subset of the plan's tiles, mixing
+    queries AND partitions — to completion, then fold each finished
+    tile's k-th score back into its query's ``theta`` carry (in place).
+
+    This is plan execution split from plan construction: the request
+    engine (``runtime.engine``) calls it with whatever tile cohort the
+    admission queue coalesced for this step (a tile per live request,
+    each at its own next partition — continuous batching), while
+    ``_run_sequential`` drives one partition's tiles per wave.  Within
+    the wave, refinement dispatch is pipelined across all tiles and
+    verification drains through the shared ``pool`` queue — the overlap
+    machinery at wave granularity.
+    """
+    plan.stats.waves += 1
+    for t in tiles:
+        _launch_tile(t, streams[t.qi], plan.queries[t.qi], params)
+    live = [t for t in tiles if t.result is None]
+    for t in live:
+        _materialize_tile(t)
+        _make_state(t, plan.queries[t.qi], theta[t.qi], params)
+    drive_states(pool, [t.state for t in live],
+                 round_hook=lambda n: _count_round(plan, n))
+    for t in live:
+        _finish_tile(t, t.index.id_offset)
+    for t in tiles:
+        if len(t.result.lb) >= params.k:
+            theta[t.qi] = max(theta[t.qi],
+                              float(t.result.lb[params.k - 1]))
+
+
 # --------------------------------------------------------------- sequential
 def _run_sequential(plan: ExecutionPlan, sim, params: SearchParams,
-                    bound_exchange: Optional[Callable] = None) -> None:
+                    bound_exchange: Optional[Callable] = None,
+                    streams=None) -> None:
     """Partitions one after the other, sharing the running max of final
     k-th scores — the paper's host reference loop (and the historical
-    ``search``/``search_batch`` trajectory, bit for bit).  The bound
-    exchange (when configured) runs once per completed partition, at the
-    loop's single inter-partition communication point."""
-    streams = build_token_stream_batch(plan.queries, sim, params.alpha,
-                                       use_kernel=params.stream_use_kernel)
+    ``search``/``search_batch`` trajectory, bit for bit): one
+    :func:`run_wave` per partition.  The bound exchange (when
+    configured) runs once per completed partition, at the loop's single
+    inter-partition communication point."""
+    streams = _build_streams(plan, sim, params, streams)
     pool = VerifierPool(plan.pool_coll, sim, params)
     theta = plan.theta0.copy()
     for pi in range(len(plan.indexes)):
-        tiles = [t for t in plan.tiles if t.pi == pi]
-        # pipelined refinement dispatch across the batch (one partition)
-        for t in tiles:
-            _launch_tile(t, streams[t.qi], plan.queries[t.qi], params)
-        live = [t for t in tiles if t.result is None]
-        for t in live:
-            _materialize_tile(t)
-            _make_state(t, plan.queries[t.qi], theta[t.qi], params)
-        drive_states(pool, [t.state for t in live],
-                     round_hook=lambda n: _count_round(plan, n))
-        for t in live:
-            _finish_tile(t, t.index.id_offset)
-        for t in tiles:
-            if len(t.result.lb) >= params.k:
-                theta[t.qi] = max(theta[t.qi],
-                                  float(t.result.lb[params.k - 1]))
+        run_wave(plan, [t for t in plan.tiles if t.pi == pi], streams,
+                 theta, pool, params)
         if pi < len(plan.indexes) - 1:      # no consumer after the last
             theta = _exchange(theta, bound_exchange)
 
 
 # ------------------------------------------------------------------ overlap
 def _run_overlapped(plan: ExecutionPlan, sim, params: SearchParams,
-                    bound_exchange: Optional[Callable]) -> None:
+                    bound_exchange: Optional[Callable],
+                    streams=None) -> None:
     """All tiles in flight at once: pipelined refinement dispatch across
     partitions, one global verification queue, bidirectional bounds."""
-    streams = build_token_stream_batch(plan.queries, sim, params.alpha,
-                                       use_kernel=params.stream_use_kernel)
+    streams = _build_streams(plan, sim, params, streams)
     # Dispatch EVERY tile's refinement before materializing any: the
     # device works through later partitions' scans back-to-back while the
     # host expands and materializes earlier tiles (the sequential loop
@@ -266,8 +340,83 @@ def _run_overlapped(plan: ExecutionPlan, sim, params: SearchParams,
 
 
 # --------------------------------------------------------------------- fused
+def _wave_tile_state(tile: _Tile, row: int, launch, out, query,
+                     theta_q: float, params: SearchParams) -> bool:
+    """Resume one tile from a materialized wave's row: build its
+    ``PostprocessState`` via ``PostprocessState.from_wave`` (or mark the
+    tile empty).  Returns whether the tile is live.  Shared by the
+    all-partitions fused drive and the engine's single-wave step."""
+    meta = launch.tile_meta[row]
+    if meta.empty:
+        tile.result = _empty_result()
+        return False
+    surv = out.surv_idx[row][:int(out.surv_cnt[row])]
+    stats = SearchStats(
+        candidates=int(out.candidates[row]),
+        pruned_refinement=int(out.pruned_ref[row]),
+        pruned_postprocess=int(out.pruned_post[row]),
+        stream_tuples=meta.n_tuples,
+        stream_events=meta.n_events,
+        refinement_chunks=meta.n_chunks)
+    tile.state = PostprocessState.from_wave(
+        query, surv,
+        out.lb[row][surv], out.ub[row][surv],
+        out.live[row][surv], out.verified[row][surv],
+        em_early=int(out.em_early[row]),
+        em_full=int(out.em_full[row]),
+        theta_lb=float(theta_q), params=params, stats=stats,
+        id_base=tile.id_base)
+    return True
+
+
+def run_fused_wave(plan: ExecutionPlan, tiles: Sequence[_Tile], streams,
+                   theta, pool: VerifierPool, params: SearchParams,
+                   runner) -> None:
+    """Execute one fused *device* wave for a tile cohort sharing a single
+    partition (the engine's continuous-batching step, device edition):
+    dispatch the wave program over the cohort's queries, resume each tile
+    through ``PostprocessState.from_wave``, drain the host continuation
+    through the shared ``pool``, and fold finished k-th scores back into
+    the per-query ``theta`` carries.  ``runner`` is an engine-lifetime
+    :class:`core.wave.WaveRunner` (see ``wave.wave_runner_for``), so the
+    normalized table and per-partition dense operands are reused across
+    requests."""
+    from .wave import _pow2
+
+    assert len({t.pi for t in tiles}) == 1, "one partition per fused wave"
+    index = tiles[0].index
+    queries = [plan.queries[t.qi] for t in tiles]
+    wave_streams = [streams[t.qi] for t in tiles]
+    theta0 = np.asarray([theta[t.qi] for t in tiles], np.float64)
+    theta_dev = runner.init_theta(theta0, _pow2(max(1, len(queries))))
+    launch, theta_dev = runner.launch_wave(index, queries, wave_streams,
+                                           theta_dev)
+    plan.stats.waves += 1
+    plan.stats.device_rounds += launch.cfg.rounds
+    out = runner.materialize(launch)
+    instrument.record("d2h:theta_materialize")
+    theta_out = np.maximum(theta0, np.asarray(theta_dev,
+                                              np.float64)[:len(queries)])
+    live = []
+    for row, t in enumerate(tiles):
+        # theta carries fold the on-device exchange back in (monotone)
+        theta[t.qi] = max(theta[t.qi], float(theta_out[row]))
+        if _wave_tile_state(t, row, launch, out, plan.queries[t.qi],
+                            theta_out[row], params):
+            live.append(t)
+    drive_states(pool, [t.state for t in live],
+                 round_hook=lambda n: _count_round(plan, n))
+    for t in live:
+        _finish_tile(t, t.index.id_offset)
+    for t in tiles:
+        if len(t.result.lb) >= params.k:
+            theta[t.qi] = max(theta[t.qi],
+                              float(t.result.lb[params.k - 1]))
+
+
 def _run_fused(plan: ExecutionPlan, sim, params: SearchParams,
-               bound_exchange: Optional[Callable], mesh=None) -> None:
+               bound_exchange: Optional[Callable], mesh=None,
+               streams=None) -> None:
     """On-device wave pipeline (DESIGN.md §3): one device program per
     partition wave — refinement chunk scans, candidate compaction,
     theta_lb exchange, and the first R verification rounds — with waves
@@ -275,12 +424,10 @@ def _run_fused(plan: ExecutionPlan, sim, params: SearchParams,
     between partitions).  The host drive loop resumes from each tile's
     wave state for the remaining verification, with the same global queue
     and bidirectional bound feedback as the overlap schedule."""
-    from .postprocess import PostprocessState
-    from .wave import WaveRunner, _pow2
+    from .wave import _pow2, wave_runner_for
 
-    streams = build_token_stream_batch(plan.queries, sim, params.alpha,
-                                       use_kernel=params.stream_use_kernel)
-    runner = WaveRunner(sim, params, mesh=mesh)
+    streams = _build_streams(plan, sim, params, streams)
+    runner = wave_runner_for(sim, params, mesh=mesh)
     B_pad = _pow2(max(1, len(plan.queries)))
     theta_dev = runner.init_theta(plan.theta0, B_pad)
 
@@ -305,28 +452,9 @@ def _run_fused(plan: ExecutionPlan, sim, params: SearchParams,
     for pi, launch in enumerate(launches):
         out = runner.materialize(launch)
         for t in (t for t in plan.tiles if t.pi == pi):
-            meta = launch.tile_meta[t.qi]
-            if meta.empty:
-                t.result = _empty_result()
-                continue
-            qi = t.qi
-            surv = out.surv_idx[qi][:int(out.surv_cnt[qi])]
-            stats = SearchStats(
-                candidates=int(out.candidates[qi]),
-                pruned_refinement=int(out.pruned_ref[qi]),
-                pruned_postprocess=int(out.pruned_post[qi]),
-                stream_tuples=meta.n_tuples,
-                stream_events=meta.n_events,
-                refinement_chunks=meta.n_chunks)
-            t.state = PostprocessState.from_wave(
-                plan.queries[qi], surv,
-                out.lb[qi][surv], out.ub[qi][surv],
-                out.live[qi][surv], out.verified[qi][surv],
-                em_early=int(out.em_early[qi]),
-                em_full=int(out.em_full[qi]),
-                theta_lb=float(theta[qi]), params=params, stats=stats,
-                id_base=t.id_base)
-            live.append(t)
+            if _wave_tile_state(t, t.qi, launch, out,
+                                plan.queries[t.qi], theta[t.qi], params):
+                live.append(t)
 
     # host continuation: same exchange + global queue as overlap
     _exchange_bounds(plan, live, theta, bound_exchange,

@@ -108,6 +108,21 @@ def partition_ranges(set_sizes: np.ndarray, partitions: int,
     return np.maximum.accumulate(np.clip(bounds, 0, n))
 
 
+def build_partition_indexes(coll: SetCollection, partitions: int,
+                            by: str = "sets") -> "list[KoiosIndex]":
+    """Build the per-partition indexes of a repository split — THE
+    partitioning used by every serving entry point (``KoiosSearch`` and
+    the request engine share it, so their plans decompose identically —
+    a precondition of the engine == one-shot bit-identity)."""
+    out = []
+    bounds = partition_ranges(coll.set_sizes, partitions, by=by)
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        if hi > lo:
+            out.append(KoiosIndex.build(coll.slice_sets(int(lo), int(hi)),
+                                        id_offset=int(lo)))
+    return out
+
+
 def merge_topk(results: Sequence[SearchResult], k: int) -> SearchResult:
     """Merge per-partition top-k lists (paper: 'merge-sorted')."""
     ids = np.concatenate([r.ids for r in results])
@@ -137,28 +152,29 @@ class KoiosSearch:
     ``repro.runtime.sharding.all_reduce_max``); ``mesh`` additionally
     moves the fused schedule's exchange on-device.  ``scheduler_stats``
     holds the :class:`SchedulerStats` of the most recent call.
+    ``stream_cache`` optionally plugs a
+    :class:`~repro.core.token_stream.TokenStreamCache` into the one-shot
+    path: repeated queries skip the blocked stream sweep (bit-identical
+    streams, DESIGN.md §3.2) — the request engine's cache layer,
+    available without the engine.
     """
 
     def __init__(self, coll: SetCollection, sim_provider,
                  params: Optional[SearchParams] = None,
                  partitions: int = 1, schedule: str = "fused",
                  bound_exchange: Optional[Callable] = None,
-                 partition_by: str = "sets", mesh=None):
+                 partition_by: str = "sets", mesh=None,
+                 stream_cache=None):
         self.params = params or SearchParams()
         self.sim = sim_provider
         self.coll = coll
         self.schedule = schedule
         self.bound_exchange = bound_exchange
         self.mesh = mesh
+        self.stream_cache = stream_cache
         self.scheduler_stats: Optional[SchedulerStats] = None
-        self.partitions = []
-        bounds = partition_ranges(coll.set_sizes, partitions,
-                                  by=partition_by)
-        for lo, hi in zip(bounds[:-1], bounds[1:]):
-            if hi > lo:
-                self.partitions.append(
-                    KoiosIndex.build(coll.slice_sets(int(lo), int(hi)),
-                                     id_offset=int(lo)))
+        self.partitions = build_partition_indexes(coll, partitions,
+                                                  by=partition_by)
 
     def search(self, query: np.ndarray, k: Optional[int] = None,
                schedule: Optional[str] = None) -> SearchResult:
@@ -182,10 +198,16 @@ class KoiosSearch:
         queries = [np.asarray(q, dtype=np.int32) for q in queries]
         if not queries:
             return []
+        streams = None
+        if self.stream_cache is not None:
+            from .token_stream import build_token_stream_batch_cached
+            streams = build_token_stream_batch_cached(
+                queries, self.sim, params.alpha, self.stream_cache,
+                use_kernel=params.stream_use_kernel)
         plan = ExecutionPlan(self.partitions, queries, pool_coll=self.coll)
         per_query = run_plan(plan, self.sim, params,
                              schedule=schedule or self.schedule,
                              bound_exchange=self.bound_exchange,
-                             mesh=self.mesh)
+                             mesh=self.mesh, streams=streams)
         self.scheduler_stats = plan.stats
         return [merge_topk(rs, params.k) for rs in per_query]

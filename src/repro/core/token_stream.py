@@ -25,15 +25,30 @@ so the partition scheduler (``repro.core.scheduler``) builds each query's
 stream once and expands it through every partition's inverted index,
 replacing the historical per-partition rebuild with P calls to
 :func:`expand_to_events` per query.
+
+Cross-REQUEST reuse (DESIGN.md §3.2): because the stream is a pure
+function of that (query tokens, alpha, provider) key, repeated or
+overlapping requests can skip the blocked sweep entirely —
+:class:`TokenStreamCache` is the LRU the request engine (and
+``KoiosSearch(stream_cache=...)``) consults, and
+:func:`build_token_stream_batch_cached` the cache-aware build that
+sweeps only the misses (still as ONE stacked matmul) and returns
+streams bit-identical to the uncached batch build.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 
 import numpy as np
 
 from .inverted_index import InvertedIndex
-from .types import SetCollection
+from .types import SetCollection, pad_ids_pow2, pow2
+
+# The provider sweep (and the cosine_topk kernel) compiles one program
+# per stacked-row count; serving coalesces arbitrary request mixes, so
+# without the ``pad_ids_pow2`` row bucket every new cohort composition
+# would be a fresh compile (pad rows are sliced off — bit-identical).
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,17 +129,19 @@ def _build_stream_entries_kernel(stacked: np.ndarray, sim_provider,
         z = np.zeros(0, np.int64)
         return z, z.astype(np.int32), np.zeros(0, np.float32)
     # cached device-resident normalized table; query rows gathered on
-    # device (no full-table round-trip per call)
+    # device (no full-table round-trip per call).  Rows pad to a pow2
+    # bucket so steady-state serving reuses compiled programs (pad rows
+    # are sliced off before any value is consumed — bit-identical).
     from .similarity import normalized_table_for
     table_n = normalized_table_for(sim_provider)
-    qe = table_n[jnp.asarray(stacked)]
+    qe = table_n[jnp.asarray(pad_ids_pow2(stacked))]
     k = min(128, vocab)
     while True:
         instrument.record("h2d:stream_kernel_dispatch")
         instrument.record("d2h:stream_materialize")
         vals, idx = kops.cosine_topk(qe, table_n, k=k)
-        vals = np.asarray(vals)
-        idx = np.asarray(idx)
+        vals = np.asarray(vals)[:len(stacked)]
+        idx = np.asarray(idx)[:len(stacked)]
         if k == vocab or float(vals[:, -1].max()) < alpha:
             break
         k = min(k * 2, vocab)          # a row saturated: deepen the top-k
@@ -196,9 +213,13 @@ def build_token_stream_batch(queries, sim_provider, alpha: float,
     qs = [[] for _ in queries]
     ts = [[] for _ in queries]
     ss = [[] for _ in queries]
+    # pow2 row bucket: one compiled sweep program per (bucket, block)
+    # instead of one per cohort composition (pad rows sliced off)
+    stacked_in = pad_ids_pow2(stacked)
     for lo in range(0, vocab, block_size):
         hi = min(lo + block_size, vocab)
-        block = np.asarray(sim_provider.query_vs_vocab_block(stacked, lo, hi))
+        block = np.asarray(sim_provider.query_vs_vocab_block(
+            stacked_in, lo, hi))[:len(stacked)]
         qi, tj = np.nonzero(block >= alpha)          # one compaction, B queries
         if not len(qi):
             continue
@@ -224,6 +245,117 @@ def build_token_stream_batch(queries, sim_provider, alpha: float,
             token = np.zeros(0, np.int32)
             sim = np.zeros(0, np.float32)
         out.append(_finalize_stream(query, q_pos, token, sim, vocab))
+    return out
+
+
+class TokenStreamCache:
+    """LRU cache of token streams keyed by (query tokens, alpha, provider).
+
+    Streams are pure functions of the key (module docstring), and
+    :class:`TokenStream` is frozen with arrays no consumer mutates, so a
+    hit returns the cached object itself — zero copies, bit-identical to
+    a rebuild.  The provider component of the key is its ``id`` (the
+    provider is pinned by the cache so the id cannot be recycled): two
+    providers with equal tables are distinct keys (correct, merely
+    conservative), while a provider whose table is mutated in place
+    would serve stale streams — providers are immutable by convention
+    everywhere else in the repo.
+
+    ``hits``/``misses``/``evictions`` are cumulative; the request
+    engine surfaces them per serving window via
+    ``runtime.instrument.EngineCounters``.
+    """
+
+    def __init__(self, capacity: int = 512):
+        assert capacity >= 1
+        self.capacity = int(capacity)
+        self._entries: "OrderedDict[tuple, TokenStream]" = OrderedDict()
+        # pin each keyed provider so its id cannot be recycled by the
+        # allocator while entries keyed on it may still be alive (a
+        # handful of providers per process; never evicted)
+        self._providers: dict = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def key(self, query: np.ndarray, alpha: float, sim_provider) -> tuple:
+        q = np.ascontiguousarray(np.asarray(query, np.int32))
+        self._providers[id(sim_provider)] = sim_provider
+        return (q.tobytes(), float(alpha), id(sim_provider))
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def contains(self, key: tuple) -> bool:
+        """Membership probe that touches neither LRU order nor counters
+        (per-request hit attribution in the engine)."""
+        return key in self._entries
+
+    def get(self, key: tuple):
+        """Cached stream for ``key`` (bumping LRU + hit/miss counters)."""
+        stream = self._entries.get(key)
+        if stream is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return stream
+
+    def put(self, key: tuple, stream: TokenStream) -> None:
+        self._entries[key] = stream
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def stats(self) -> dict:
+        lookups = self.hits + self.misses
+        return {"size": len(self._entries), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": self.hits / lookups if lookups else 0.0}
+
+
+def build_token_stream_batch_cached(queries, sim_provider, alpha: float,
+                                    cache: TokenStreamCache,
+                                    block_size: int = 4096,
+                                    use_kernel: bool = False
+                                    ) -> "list[TokenStream]":
+    """Cache-aware :func:`build_token_stream_batch`: hits skip the sweep,
+    misses build in ONE stacked sweep and populate the cache.
+
+    Duplicate queries within one call build once (the later occurrences
+    count as hits — they are served without a sweep).  Each per-query
+    stream is bit-identical to the uncached batch build: rows of the
+    stacked sweep are exactly the rows a per-query call computes, so
+    sweeping only the misses changes nothing (see the batch builder's
+    contract).
+    """
+    queries = [np.asarray(q, dtype=np.int32) for q in queries]
+    keys = [cache.key(q, alpha, sim_provider) for q in queries]
+    out: "list[Optional[TokenStream]]" = [None] * len(queries)
+    build_idx: "list[int]" = []          # first occurrence of each missed key
+    followers: "dict[tuple, list[int]]" = {}
+    for i, key in enumerate(keys):
+        if key in followers:             # duplicate miss within this call
+            followers[key].append(i)
+            cache.hits += 1
+            continue
+        stream = cache.get(key)
+        if stream is None:
+            build_idx.append(i)
+            followers[key] = []
+        else:
+            out[i] = stream
+    if build_idx:
+        built = build_token_stream_batch(
+            [queries[i] for i in build_idx], sim_provider, alpha,
+            block_size=block_size, use_kernel=use_kernel)
+        for i, stream in zip(build_idx, built):
+            cache.put(keys[i], stream)
+            out[i] = stream
+            for j in followers[keys[i]]:
+                out[j] = stream
     return out
 
 
@@ -266,11 +398,7 @@ def pad_events(events: EventStream, chunk: int):
     (set_id = -1 padding).  Pow2 chunk counts bound jit recompilations of the
     refinement scan to O(log stream-length) distinct shapes."""
     e = len(events)
-    n_chunks = max(1, -(-e // chunk))
-    p = 1
-    while p < n_chunks:
-        p *= 2
-    n_chunks = p
+    n_chunks = pow2(max(1, -(-e // chunk)))
     total = n_chunks * chunk
     pad = total - e
 

@@ -15,6 +15,28 @@ from typing import Optional
 import numpy as np
 
 
+def pow2(n: int, lo: int = 1) -> int:
+    """Smallest power of two >= ``n`` (floored at ``lo``) — THE
+    shape-bucket rounding every padded dimension shares (chunk counts,
+    solver batches, wave configs, sweep rows, pairwise dispatch:
+    DESIGN.md §2/§3.2).  One implementation so the bucket invariant
+    tests/test_recompile.py asserts cannot diverge between stages."""
+    p = lo
+    while p < n:
+        p *= 2
+    return p
+
+
+def pad_ids_pow2(ids: np.ndarray, lo: int = 8) -> np.ndarray:
+    """Pad an id vector to a pow2 length with id 0.  Callers slice the
+    padded rows/cols off before any value is consumed, and provider ops
+    are row/col-independent, so the retained values are bit-identical."""
+    pad = pow2(max(len(ids), 1), lo) - len(ids)
+    if pad == 0:
+        return ids
+    return np.concatenate([ids, np.zeros(pad, ids.dtype)])
+
+
 @dataclasses.dataclass(frozen=True)
 class SetCollection:
     """Repository of sets in CSR layout.

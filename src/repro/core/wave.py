@@ -53,15 +53,9 @@ from .refinement import (refine_carry_init, refine_chunk_step,
                          refine_finalize)
 from .token_stream import expand_to_events, pad_events
 from .types import SearchParams
+from .types import pow2 as _pow2
 
 _NEGINF = jnp.float32(-jnp.inf)
-
-
-def _pow2(n: int, lo: int = 1) -> int:
-    p = lo
-    while p < n:
-        p *= 2
-    return p
 
 
 def fused_available(params: SearchParams, sim_provider) -> bool:
@@ -259,6 +253,30 @@ def _wave_fn(cfg: WaveConfig, mesh):
     return jax.jit(fn, donate_argnums=(6,))
 
 
+# Engine-lifetime runner reuse (DESIGN.md §3.2): keyed by provider/mesh
+# identity + the full (hashable, frozen) params.  Bounded in practice by
+# the handful of provider/params combinations a process serves; entries
+# pin their provider's normalized table on device, which is exactly the
+# point.
+_RUNNER_CACHE: dict = {}
+
+
+def wave_runner_for(sim_provider, params: SearchParams,
+                    mesh=None) -> "WaveRunner":
+    """The shared :class:`WaveRunner` of a (provider, params, mesh)
+    triple — cross-request reuse of the device-resident normalized table,
+    eps schedule, and (via the index-cached operands) every partition's
+    dense token matrix."""
+    key = (id(sim_provider), params, id(mesh))
+    hit = _RUNNER_CACHE.get(key)
+    if hit is None:
+        # pin the provider (and mesh) so their ids cannot be recycled by
+        # the allocator while the cache entry is alive
+        hit = _RUNNER_CACHE[key] = (
+            WaveRunner(sim_provider, params, mesh=mesh), sim_provider, mesh)
+    return hit[0]
+
+
 @dataclasses.dataclass
 class _TileMeta:
     """Host-side per-tile stream facts (stats; not part of the program)."""
@@ -294,8 +312,16 @@ class WaveOutputs:
 
 
 class WaveRunner:
-    """Per-plan fused-wave context: device-resident normalized table,
-    per-partition dense operands (cached on the index), theta chaining."""
+    """Fused-wave context: device-resident normalized table, per-partition
+    dense operands (cached on the index), theta chaining.
+
+    The runner holds no per-plan state — every launch threads its carry
+    explicitly — so ONE runner serves every plan/request that shares a
+    (provider, params, mesh) triple; obtain it via
+    :func:`wave_runner_for` (the request engine and the fused schedule
+    both do), and the normalized-table upload, eps schedule, and dense
+    partition operands are paid once per engine lifetime instead of once
+    per request."""
 
     def __init__(self, sim_provider, params: SearchParams,
                  mesh=None):

@@ -1,15 +1,17 @@
-"""Serving driver: batched KOIOS search requests over a sharded corpus.
+"""Serving driver: a thin shell over the continuous-batching request
+engine (``repro.runtime.engine``, DESIGN.md §3.2).
 
-This is the paper's system as a service: the repository is sharded over the
-(pod, data) mesh axes (paper §VI scale-out) and every request batch is one
-``ExecutionPlan`` — (query x partition) tiles driven by the partition
-scheduler with cross-partition pipelined refinement dispatch, one global
-verification queue, and bidirectional theta_lb feedback.  With ``--mesh-bounds`` the
-per-round bound exchange runs as a real all-reduce-max over the mesh's
-data axis (``repro.runtime.sharding.all_reduce_max``); otherwise the host
-reference exchange (a plain max over tiles) is used — same numbers,
-DESIGN.md §5.  ``--sequential`` serves with the pre-scheduler partition
-loop (the A/B baseline; bit-identical results).
+Every request is admitted into the engine's queue (optional deadlines),
+coalesced into the next partition wave with whatever else has arrived
+(mid-flight joins are sound — row numerics are schedule-invariant),
+served through the LRU token-stream cache and pow2 shape buckets, and
+responded to with its TRUE admit->respond latency — the historical
+``serve_batch`` reported one amortized number for every query in the
+batch.  ``--fused`` drives each wave's partition groups as fused
+on-device programs (DESIGN.md §3.1); ``--mesh-bounds`` runs the theta_lb
+exchange as a real all-reduce-max over the repository mesh (DESIGN.md
+§5).  ``--per-query`` keeps the per-query one-shot loop as the A/B
+baseline (bit-identical results).
 
 Smoke scale:
     PYTHONPATH=src python -m repro.launch.serve --requests 4 --k 5
@@ -17,7 +19,6 @@ Smoke scale:
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
@@ -25,44 +26,65 @@ import numpy as np
 from ..core import (EmbeddingSimilarity, KoiosSearch, SearchParams)
 from ..data import (EmbeddingTableProvider, dataset_preset, make_embeddings,
                     sample_queries)
+from ..runtime.engine import RequestEngine
+
+
+def _response_dict(r) -> dict:
+    """One EngineResponse -> the serving-API response payload."""
+    return {
+        "ids": r.result.ids.tolist(),
+        "scores": r.result.lb.tolist(),
+        "latency_s": round(r.latency_s, 4),     # true per-request
+        "queue_s": round(r.queue_s, 4),
+        "waves": r.waves,
+        "stream_cache_hit": r.stream_hit,
+        "deadline_met": r.deadline_met,
+        "stats": r.result.stats.as_dict(),
+    }
 
 
 class SearchServer:
-    """Batched request loop over a partitioned KOIOS engine.
+    """Request-engine serving with a one-shot per-query baseline.
 
-    ``serve_batch`` runs the whole request batch through one execution
-    plan: a stacked similarity sweep shared by every partition, async
-    refinement dispatch across (query x partition) tiles, and a shared
-    cross-query/cross-partition verification queue.  ``batched=False``
-    falls back to per-query plans (identical results — the A/B baseline
-    of ``benchmarks/response_time.py``)."""
+    ``serve_batch`` admits the batch into the :class:`RequestEngine`
+    and drains it: every response carries its own admit->respond
+    latency, queue time, wave count, and stream-cache attribution.
+    ``batched=False`` falls back to the per-query one-shot loop
+    (identical results — the A/B baseline of
+    ``benchmarks/response_time.py``)."""
 
     def __init__(self, coll, sim, params: SearchParams, partitions: int,
-                 schedule: str = "overlap", bound_exchange=None, mesh=None):
-        self.engine = KoiosSearch(coll, sim, params, partitions=partitions,
-                                  schedule=schedule,
-                                  bound_exchange=bound_exchange, mesh=mesh)
+                 schedule: str = "overlap", bound_exchange=None, mesh=None,
+                 stream_cache_capacity: int = 512):
+        self.one_shot = KoiosSearch(coll, sim, params,
+                                    partitions=partitions,
+                                    schedule=schedule,
+                                    bound_exchange=bound_exchange,
+                                    mesh=mesh)
+        self.engine = RequestEngine(
+            coll, sim, params,
+            schedule="fused" if schedule == "fused" else "wave",
+            bound_exchange=bound_exchange, mesh=mesh,
+            stream_cache_capacity=stream_cache_capacity,
+            indexes=self.one_shot.partitions)     # one index build, shared
 
-    def serve_batch(self, queries, batched: bool = True):
-        """One batched request: list of query sets -> list of results."""
+    def serve_batch(self, queries, batched: bool = True, deadlines=None):
+        """One request batch -> list of response dicts (request order)."""
         queries = [np.asarray(q, np.int32) for q in queries]
         if batched:
-            t0 = time.time()
-            results = self.engine.search_batch(queries)
-            lat = round((time.time() - t0) / max(len(queries), 1), 4)
-            lats = [lat] * len(queries)       # amortized per-query latency
-        else:
-            results, lats = [], []
-            for q in queries:
-                t0 = time.time()
-                results.append(self.engine.search(q))
-                lats.append(round(time.time() - t0, 4))
-        return [{
-            "ids": res.ids.tolist(),
-            "scores": res.lb.tolist(),
-            "latency_s": lat,
-            "stats": res.stats.as_dict(),
-        } for res, lat in zip(results, lats)]
+            responses = self.engine.serve(queries, deadlines=deadlines)
+            return [_response_dict(r) for r in responses]
+        out = []
+        for q in queries:
+            t0 = time.monotonic()
+            res = self.one_shot.search(q)
+            out.append({
+                "ids": res.ids.tolist(),
+                "scores": res.lb.tolist(),
+                "latency_s": round(time.monotonic() - t0, 4),
+                "stats": res.stats.as_dict(),
+            })
+        return out
 
 
 def main(argv=None):
@@ -75,19 +97,21 @@ def main(argv=None):
     ap.add_argument("--partitions", type=int, default=2)
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--batch-size", type=int, default=2)
+    ap.add_argument("--stagger-ms", type=float, default=0.0,
+                    help="replay the request trace with this inter-arrival "
+                         "gap instead of submitting each batch at once "
+                         "(continuous batching joins mid-flight)")
     ap.add_argument("--per-query", action="store_true",
-                    help="serve each query independently (A/B baseline for "
-                         "the default fused multi-query path)")
+                    help="serve each query independently through the "
+                         "one-shot path (A/B baseline for the engine)")
     sched = ap.add_mutually_exclusive_group()
     sched.add_argument("--sequential", action="store_true",
-                       help="drive partitions with the sequential "
-                            "running-max loop instead of the overlapped "
-                            "scheduler (bit-identical results; A/B "
-                            "baseline)")
+                       help="one-shot baseline schedule for --per-query; "
+                            "the engine's host waves are unaffected "
+                            "(bit-identical results either way)")
     sched.add_argument("--fused", action="store_true",
-                       help="serve with the fused on-device wave schedule "
-                            "(DESIGN.md §3) — one device program per "
-                            "partition wave; interpret mode off-TPU; "
+                       help="serve with fused on-device wave programs "
+                            "(DESIGN.md §3) — interpret mode off-TPU; "
                             "bit-identical results")
     ap.add_argument("--mesh-bounds", action="store_true",
                     help="run the theta_lb exchange as an all-reduce-max "
@@ -116,27 +140,43 @@ def main(argv=None):
                           schedule=schedule,
                           bound_exchange=bound_exchange, mesh=mesh)
     print(f"[serve] corpus: {coll.num_sets} sets, vocab {coll.vocab_size}, "
-          f"{args.partitions} partitions, schedule={schedule}")
+          f"{args.partitions} partitions, "
+          f"engine schedule={server.engine.schedule}")
 
     queries = sample_queries(coll, args.requests, seed=1)
     for lo in range(0, len(queries), args.batch_size):
         batch = queries[lo:lo + args.batch_size]
-        results = server.serve_batch(batch, batched=not args.per_query)
+        if args.stagger_ms and not args.per_query:
+            now = server.engine.clock()
+            for i, q in enumerate(batch):
+                server.engine.submit(
+                    q, arrival=now + i * args.stagger_ms / 1e3)
+            results = [_response_dict(r)
+                       for r in sorted(server.engine.drain(),
+                                       key=lambda r: r.rid)]
+        else:
+            results = server.serve_batch(batch,
+                                         batched=not args.per_query)
         for i, r in enumerate(results):
+            extra = ("" if args.per_query else
+                     f"queue={r['queue_s']}s waves={r['waves']} "
+                     f"cached={r['stream_cache_hit']} ")
             print(f"req {lo+i}: top-{args.k} ids={r['ids'][:5]}... "
                   f"scores={[round(s,2) for s in r['scores'][:5]]} "
-                  f"lat={r['latency_s']}s "
+                  f"lat={r['latency_s']}s {extra}"
                   f"verified={r['stats']['exact_matches']}")
-        st = server.engine.scheduler_stats
-        if st is not None and not args.per_query:
-            # per-query mode runs one plan per query; engine stats hold
-            # only the last plan, so the batch-level line would mislead
-            print(f"  [scheduler] schedule={st.schedule} tiles={st.tiles} "
-                  f"waves={st.waves} device_rounds={st.device_rounds} "
-                  f"rounds={st.rounds} "
-                  f"fused_requests={st.fused_requests} "
-                  f"bound_raises={st.bound_raises} "
-                  f"(backward={st.backward_raises})")
+    if not args.per_query:
+        s = server.engine.summary()
+        cache = s["stream_cache"]
+        print(f"  [engine] schedule={s['schedule']} "
+              f"requests={s['requests']} steps={s['steps']} "
+              f"mean_lat={s['mean_latency_s']:.4f}s "
+              f"p95={s['p95_latency_s']:.4f}s "
+              f"mean_queue_depth={s['mean_queue_depth']:.1f} "
+              f"waves={s['scheduler']['waves']} "
+              f"cache_hit_rate={cache['hit_rate']:.2f} "
+              f"(hits={cache['hits']} misses={cache['misses']} "
+              f"evictions={cache['evictions']})")
     return 0
 
 

@@ -5,4 +5,15 @@ from .fault import (FleetMonitor, FaultConfig, plan_elastic_mesh,
 
 __all__ = ["param_pspecs", "opt_state_pspecs", "input_pspecs",
            "to_shardings", "fsdp_axes", "dp_axes", "FleetMonitor",
-           "FaultConfig", "plan_elastic_mesh", "resume_plan"]
+           "FaultConfig", "plan_elastic_mesh", "resume_plan",
+           "RequestEngine", "EngineResponse"]
+
+
+def __getattr__(name):
+    # engine imports repro.core, which itself imports
+    # repro.runtime.instrument — resolve the request-engine names lazily
+    # so `import repro.core` never re-enters a half-initialized package
+    if name in ("RequestEngine", "EngineResponse"):
+        from . import engine
+        return getattr(engine, name)
+    raise AttributeError(name)

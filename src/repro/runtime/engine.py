@@ -1,0 +1,375 @@
+"""Continuous-batching request engine (DESIGN.md §3.2).
+
+The serving runtime the ROADMAP's "heavy traffic" north star asks for:
+instead of the batch-synchronous demo loop (pre-form a batch, rebuild
+streams and a plan from scratch, run it to completion, report one
+amortized latency), :class:`RequestEngine` owns an explicit request
+lifecycle
+
+    admit -> stream -> plan -> waves -> postprocess -> respond
+
+with cross-request reuse at every stage:
+
+* **admit** — requests enter an admission queue with optional deadlines
+  (earliest-deadline-first, FIFO among equals).  Nothing waits for a
+  batch to "fill": every engine step coalesces whatever has arrived.
+* **stream** — token streams come from an LRU
+  :class:`~repro.core.token_stream.TokenStreamCache` keyed by
+  (query tokens, alpha, provider): repeated or overlapping queries skip
+  ``build_token_stream_batch`` entirely; the misses of a step build in
+  ONE stacked sweep.
+* **plan** — one long-lived :class:`~repro.core.scheduler.ExecutionPlan`
+  absorbs joiners mid-flight (``plan.add_queries``): a request admitted
+  while others are halfway through their partitions joins the very next
+  wave.  Sound because a query's tiles read only its own theta carry and
+  row-level numerics are schedule-invariant (DESIGN.md §3) — the final
+  top-k is bit-identical to the one-shot ``search_batch`` path.
+* **waves** — each step runs one wave: a tile per live request, each at
+  its own next partition (``scheduler.run_wave``), or per-partition
+  fused device programs (``scheduler.run_fused_wave``) through the
+  engine-lifetime :func:`~repro.core.wave.wave_runner_for` runner.
+  Batch shapes pad to the existing pow2 buckets, so steady-state serving
+  triggers zero recompiles (tests/test_recompile.py).
+* **respond** — per-request merge + true admit->respond latency from
+  :class:`~repro.runtime.instrument.EngineCounters` (never an amortized
+  batch figure).
+
+The engine is single-threaded and synchronous — "continuous batching"
+is a property of the schedule (mid-flight joins at wave boundaries), not
+of host threading, exactly as in serving systems whose step loop owns
+the batch (the vLLM lesson applied to set search).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.postprocess import VerifierPool
+from ..core.scheduler import (ExecutionPlan, SchedulerStats, _exchange,
+                              run_fused_wave, run_wave)
+from ..core.search import (KoiosIndex, build_partition_indexes, merge_topk)
+from ..core.token_stream import (TokenStreamCache,
+                                 build_token_stream_batch_cached)
+from ..core.types import SearchParams, SearchResult
+from .instrument import EngineCounters, RequestTrace
+
+
+@dataclasses.dataclass
+class _Request:
+    """Engine-internal lifecycle record of one admitted request."""
+
+    rid: int
+    query: np.ndarray
+    trace: RequestTrace
+    arrival: float                       # visibility time (trace replay)
+    seq: int                             # admission tiebreak (FIFO)
+    qi: int = -1                         # plan query index once joined
+    pending: List[int] = dataclasses.field(default_factory=list)
+    parts: Dict[int, SearchResult] = dataclasses.field(default_factory=dict)
+
+    def priority(self) -> tuple:
+        d = self.trace.deadline
+        return (d if d is not None else float("inf"), self.seq)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineResponse:
+    """What ``respond`` emits: the merged result + true per-request
+    lifecycle timings (the numbers ``serve_batch`` used to fake with one
+    amortized figure)."""
+
+    rid: int
+    result: SearchResult
+    latency_s: float                     # admit -> respond
+    queue_s: float                       # admit -> first wave
+    waves: int
+    stream_hit: bool
+    deadline_met: Optional[bool]
+
+
+class RequestEngine:
+    """Admission-queued, stream-cached, shape-bucketed search runtime.
+
+    ``schedule``: ``"wave"`` drives host waves (works on any backend;
+    ``"overlap"``/``"sequential"`` are accepted aliases — at wave
+    granularity they coincide), ``"fused"`` runs each wave's
+    per-partition groups as fused device programs where available
+    (``core.wave.fused_available``; falls back to host waves).  Results
+    are bit-identical across all of them and to the one-shot
+    ``KoiosSearch.search_batch`` (tests/test_engine.py).
+
+    ``clock``/``sleep`` are injectable for deterministic trace-replay
+    tests; real serving uses the monotonic wall clock.
+    """
+
+    def __init__(self, coll, sim_provider,
+                 params: Optional[SearchParams] = None,
+                 partitions: int = 1, schedule: str = "wave",
+                 partition_by: str = "sets",
+                 bound_exchange: Optional[Callable] = None, mesh=None,
+                 stream_cache_capacity: int = 512,
+                 max_wave_requests: int = 64,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
+                 indexes: Optional[Sequence[KoiosIndex]] = None):
+        self.params = params or SearchParams()
+        self.sim = sim_provider
+        self.coll = coll
+        self.bound_exchange = bound_exchange
+        self.mesh = mesh
+        self.clock = clock
+        self._sleep = sleep
+        self.max_wave_requests = int(max_wave_requests)
+
+        if indexes is not None:        # prebuilt partitions (benchmarks
+            self.partitions = list(indexes)     # share one index build)
+        else:
+            self.partitions = build_partition_indexes(coll, partitions,
+                                                      by=partition_by)
+
+        if schedule in ("overlap", "sequential"):
+            schedule = "wave"
+        assert schedule in ("wave", "fused"), schedule
+        self._runner = None
+        if schedule == "fused":
+            from ..core.wave import fused_available, wave_runner_for
+            if fused_available(self.params, sim_provider):
+                self._runner = wave_runner_for(sim_provider, self.params,
+                                               mesh=mesh)
+            else:
+                schedule = "wave"
+        self.schedule = schedule
+
+        # engine-lifetime shared machinery (the cross-request reuse)
+        self.plan = ExecutionPlan(self.partitions, [], pool_coll=coll)
+        self.pool = VerifierPool(coll, sim_provider, self.params)
+        self.stream_cache = TokenStreamCache(stream_cache_capacity)
+        self.counters = EngineCounters()
+
+        self._streams: List[object] = []          # aligned with plan.queries
+        self._theta: List[float] = []             # per-query carry
+        self._tiles: Dict[int, Dict[int, object]] = {}   # qi -> pi -> tile
+        self._rid = itertools.count()
+        self._seq = itertools.count()
+        self._arrivals: List[_Request] = []       # future visibility
+        self._queue: List[_Request] = []          # admitted, awaiting join
+        self._inflight: Dict[int, _Request] = {}  # rid -> joined request
+        self._completed: List[EngineResponse] = []
+
+    # ------------------------------------------------------------- admit
+    def submit(self, query, deadline: Optional[float] = None,
+               arrival: Optional[float] = None) -> int:
+        """Admit one request; returns its request id.
+
+        ``deadline`` (clock timestamp) orders the admission queue
+        (earliest first) and is reported as met/missed on respond.
+        ``arrival`` defers the request's *visibility* to the engine —
+        trace replay for staggered-arrival benchmarks; the admit
+        timestamp is the arrival time, so queue time is measured from
+        when the request actually arrived."""
+        rid = next(self._rid)
+        now = self.clock()
+        t_arr = now if arrival is None else float(arrival)
+        req = _Request(
+            rid=rid, query=np.asarray(query, np.int32),
+            trace=RequestTrace(rid=rid, t_admit=t_arr, deadline=deadline),
+            arrival=t_arr, seq=next(self._seq))
+        if t_arr > now:
+            self._arrivals.append(req)
+            self._arrivals.sort(key=lambda r: (r.arrival, r.seq))
+        else:
+            self._queue.append(req)
+        return rid
+
+    def _admit_arrived(self, now: float) -> None:
+        while self._arrivals and self._arrivals[0].arrival <= now:
+            self._queue.append(self._arrivals.pop(0))
+
+    # -------------------------------------------------------------- join
+    def _join(self, now: float) -> None:
+        """Coalesce queued requests into the in-flight cohort: fetch or
+        build their streams (one stacked sweep for all of a step's
+        misses) and absorb them into the plan mid-flight."""
+        room = self.max_wave_requests - len(self._inflight)
+        if room <= 0 or not self._queue:
+            return
+        self._queue.sort(key=_Request.priority)
+        joiners, self._queue = self._queue[:room], self._queue[room:]
+        queries = [r.query for r in joiners]
+        # per-request hit attribution: a duplicate of a query earlier in
+        # the same join is served without a sweep too (matches the cache
+        # counters' accounting of duplicate misses)
+        hits, seen = [], set()
+        for q in queries:
+            key = self.stream_cache.key(q, self.params.alpha, self.sim)
+            hits.append(self.stream_cache.contains(key) or key in seen)
+            seen.add(key)
+        streams = build_token_stream_batch_cached(
+            queries, self.sim, self.params.alpha, self.stream_cache,
+            use_kernel=self.params.stream_use_kernel)
+        t_stream = self.clock()
+        qis, new_tiles = self.plan.add_queries(queries)
+        for t in new_tiles:
+            self._tiles.setdefault(t.qi, {})[t.pi] = t
+        self._streams.extend(streams)
+        self._theta.extend([0.0] * len(joiners))
+        for req, qi, hit in zip(joiners, qis, hits):
+            req.qi = qi
+            req.pending = list(range(len(self.partitions)))
+            req.trace.t_stream = t_stream
+            req.trace.stream_hit = bool(hit)
+            self._inflight[req.rid] = req
+
+    # -------------------------------------------------------------- waves
+    def _run_wave_tiles(self, tiles) -> None:
+        if self._runner is not None:
+            by_pi: Dict[int, list] = {}
+            for t in tiles:
+                by_pi.setdefault(t.pi, []).append(t)
+            for pi in sorted(by_pi):
+                run_fused_wave(self.plan, by_pi[pi], self._streams,
+                               self._theta, self.pool, self.params,
+                               self._runner)
+        else:
+            run_wave(self.plan, tiles, self._streams, self._theta,
+                     self.pool, self.params)
+        if self.bound_exchange is not None and self._inflight:
+            # fold the mesh's all-reduce-max back into the live carries
+            qis = [r.qi for r in self._inflight.values()]
+            vec = _exchange(np.asarray([self._theta[qi] for qi in qis],
+                                       np.float64), self.bound_exchange)
+            for qi, v in zip(qis, vec):
+                self._theta[qi] = max(self._theta[qi], float(v))
+
+    def step(self) -> List[EngineResponse]:
+        """One continuous-batching step: admit arrivals, join the queue,
+        run one wave (a tile per live request at its next partition),
+        respond to whoever finished.  Returns the step's responses."""
+        now = self.clock()
+        self._admit_arrived(now)
+        depth = len(self._queue)
+        self._join(now)
+        if not self._inflight:
+            out, self._completed = self._completed, []
+            return out
+
+        wave, reqs = [], []
+        for req in sorted(self._inflight.values(), key=_Request.priority):
+            pi = req.pending.pop(0)
+            tile = self._tiles[req.qi][pi]
+            if req.trace.waves == 0:
+                req.trace.t_first_wave = now
+            req.trace.waves += 1
+            wave.append(tile)
+            reqs.append((req, pi))
+        self.counters.observe_step(queue_depth=depth, wave_size=len(wave))
+        self._run_wave_tiles(wave)
+
+        t_done = self.clock()
+        for req, pi in reqs:
+            req.parts[pi] = self._tiles[req.qi][pi].result
+            if not req.pending:
+                self._respond(req, t_done)
+        out, self._completed = self._completed, []
+        return out
+
+    # ------------------------------------------------------------ respond
+    def _respond(self, req: _Request, t_done: float) -> None:
+        result = merge_topk([req.parts[pi] for pi in sorted(req.parts)],
+                            self.params.k)
+        req.trace.t_respond = t_done
+        self.counters.observe_respond(req.trace)
+        self._completed.append(EngineResponse(
+            rid=req.rid, result=result,
+            latency_s=req.trace.latency_s, queue_s=req.trace.queue_s,
+            waves=req.trace.waves, stream_hit=req.trace.stream_hit,
+            deadline_met=req.trace.deadline_met))
+        del self._inflight[req.rid]
+        self.plan.retire_tiles([req.qi])
+        del self._tiles[req.qi]
+        self._streams[req.qi] = None      # the LRU cache keeps the stream
+
+    # ------------------------------------------------------------- warmup
+    def warmup(self, sample: Sequence[np.ndarray],
+               reset_counters: bool = True) -> None:
+        """Compile-warm the serving path before taking traffic.
+
+        Serves pow2-sized cohorts of ``sample`` (stream sweep,
+        refinement scan, solver, and wave shapes for every batch bucket
+        the trace can coalesce) and sweeps the fused-verification
+        pairwise pow2 grid, so steady-state serving triggers zero
+        recompiles (tests/test_recompile.py).  Standard request-engine
+        startup practice; ``reset_counters`` wipes the warmup's traces
+        from the metrics (the stream cache keeps its entries — that is
+        warmup working as intended)."""
+        sample = [np.asarray(q, np.int32) for q in sample]
+        if sample:
+            bs = 1
+            while True:
+                self.serve(sample[:bs])
+                if bs >= len(sample):
+                    break
+                bs = min(2 * bs, len(sample))
+        # verification weight dispatch: the fused pairwise shape is
+        # (pow2 rows, pow2 cols) — sweep the grid the pool can emit
+        from ..core.postprocess import _pad_pow2
+        q_hi = _pad_pow2(max((sum(len(q) for q in sample), 32)), 32)
+        c_hi = min(VerifierPool._FUSE_TOKEN_CAP,
+                   _pad_pow2(self.params.verify_batch
+                             * max(int(self.coll.set_sizes.max()), 1)
+                             * max(len(sample), 1), 256))
+        qb = 32
+        while qb <= q_hi:
+            cb = 256
+            while cb <= c_hi:
+                self.sim.pairwise(np.zeros(qb, np.int32),
+                                  np.zeros(cb, np.int32))
+                cb *= 2
+            qb *= 2
+        if reset_counters:
+            self.counters = EngineCounters()
+            # scheduler-side counters (waves/rounds/...) are warmup work
+            # too — reset them so summary() reflects only real traffic
+            self.plan.stats = SchedulerStats(tiles=len(self.plan.tiles))
+
+    # -------------------------------------------------------------- drive
+    def pending(self) -> int:
+        """Requests anywhere in the lifecycle short of respond."""
+        return len(self._arrivals) + len(self._queue) + len(self._inflight)
+
+    def drain(self, max_idle_wait_s: float = 0.01) -> List[EngineResponse]:
+        """Step until every submitted request (including future-dated
+        arrivals) has responded; idle gaps sleep until the next arrival."""
+        out: List[EngineResponse] = []
+        while self.pending():
+            out.extend(self.step())
+            if not self._inflight and not self._queue and self._arrivals:
+                wait = self._arrivals[0].arrival - self.clock()
+                if wait > 0:
+                    self._sleep(min(wait, max_idle_wait_s))
+        out.extend(self.step())           # flush any buffered responses
+        return out
+
+    def serve(self, queries: Sequence[np.ndarray],
+              deadlines: Optional[Sequence[Optional[float]]] = None
+              ) -> List[EngineResponse]:
+        """Submit a batch and drain it; responses in request-id order."""
+        for i, q in enumerate(queries):
+            self.submit(q, deadline=deadlines[i] if deadlines else None)
+        return sorted(self.drain(), key=lambda r: r.rid)
+
+    def summary(self) -> dict:
+        """Engine metrics incl. stream-cache and scheduler stats."""
+        out = self.counters.summary(cache_stats=self.stream_cache.stats())
+        out["schedule"] = self.schedule
+        out["scheduler"] = {
+            "waves": self.plan.stats.waves,
+            "rounds": self.plan.stats.rounds,
+            "device_rounds": self.plan.stats.device_rounds,
+            "fused_requests": self.plan.stats.fused_requests,
+        }
+        return out

@@ -1,4 +1,4 @@
-"""Host<->device dispatch accounting (the fused-wave A/B metric).
+"""Host<->device dispatch accounting + request-engine counters.
 
 The fused wave program's whole point is eliminating host round-trips
 (DESIGN.md §3 / §8 item 6 resolution), so the benchmark needs a number
@@ -11,12 +11,19 @@ hot path pays nothing).
 Tags follow ``<direction>:<site>``: ``h2d`` = a program dispatch,
 ``d2h`` = a blocking device-to-host materialization.  The A/B in
 ``benchmarks/response_time.py --fused`` reports the per-direction sums.
+
+:class:`EngineCounters` is the request engine's per-request / per-wave
+instrumentation (DESIGN.md §3.2): true admit->respond latencies (the
+number ``serve_batch`` reports per request — NOT one amortized batch
+figure), queue-depth samples at every continuous-batching step, and the
+stream-cache hit/miss/eviction tallies of the serving window.
 """
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 from collections import Counter
-from typing import Iterator, Optional
+from typing import Iterator, List, Optional
 
 _ACTIVE: Optional[Counter] = None
 
@@ -46,3 +53,87 @@ def totals(counts: Counter) -> dict:
     d2h = sum(v for k, v in counts.items() if k.startswith("d2h:"))
     return {"h2d_dispatches": h2d, "d2h_transfers": d2h,
             "total": h2d + d2h}
+
+
+# --------------------------------------------------------- request engine
+@dataclasses.dataclass
+class RequestTrace:
+    """One request's lifecycle timestamps (engine clock seconds)."""
+
+    rid: int
+    t_admit: float
+    t_stream: float = 0.0          # stream ready (cache hit or built)
+    t_first_wave: float = 0.0      # first wave that included the request
+    t_respond: float = 0.0
+    stream_hit: bool = False
+    waves: int = 0                 # waves the request participated in
+    deadline: Optional[float] = None
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_respond - self.t_admit
+
+    @property
+    def queue_s(self) -> float:
+        """Admission-queue wait: admit -> first wave."""
+        return self.t_first_wave - self.t_admit
+
+    @property
+    def deadline_met(self) -> Optional[bool]:
+        if self.deadline is None:
+            return None
+        return self.t_respond <= self.deadline
+
+
+def _quantile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(q * len(s)))]
+
+
+class EngineCounters:
+    """Rolling request-engine metrics: per-request traces, queue-depth
+    samples (one per continuous-batching step), wave sizes, and the
+    stream-cache window deltas."""
+
+    def __init__(self) -> None:
+        self.traces: List[RequestTrace] = []
+        self.queue_depth: List[int] = []
+        self.wave_sizes: List[int] = []
+        self.steps = 0
+
+    def observe_step(self, queue_depth: int, wave_size: int) -> None:
+        self.steps += 1
+        self.queue_depth.append(int(queue_depth))
+        self.wave_sizes.append(int(wave_size))
+
+    def observe_respond(self, trace: RequestTrace) -> None:
+        self.traces.append(trace)
+
+    def summary(self, cache_stats: Optional[dict] = None) -> dict:
+        lats = [t.latency_s for t in self.traces]
+        queues = [t.queue_s for t in self.traces]
+        met = [t.deadline_met for t in self.traces
+               if t.deadline_met is not None]
+        out = {
+            "requests": len(self.traces),
+            "steps": self.steps,
+            "mean_latency_s": sum(lats) / len(lats) if lats else 0.0,
+            "p50_latency_s": _quantile(lats, 0.50),
+            "p95_latency_s": _quantile(lats, 0.95),
+            "max_latency_s": max(lats) if lats else 0.0,
+            "mean_queue_s": sum(queues) / len(queues) if queues else 0.0,
+            "mean_queue_depth": (sum(self.queue_depth)
+                                 / len(self.queue_depth)
+                                 if self.queue_depth else 0.0),
+            "max_queue_depth": max(self.queue_depth, default=0),
+            "mean_wave_size": (sum(self.wave_sizes) / len(self.wave_sizes)
+                               if self.wave_sizes else 0.0),
+            "stream_hits": sum(t.stream_hit for t in self.traces),
+            "deadlines_met": sum(met),
+            "deadlines_missed": len(met) - sum(met),
+        }
+        if cache_stats is not None:
+            out["stream_cache"] = dict(cache_stats)
+        return out

@@ -83,6 +83,71 @@ def test_engine_sweep_compiles_olog(small_world):
             hungarian_batch._cache_size()) == mid
 
 
+def _jit_cache_sizes():
+    from repro.core.matching.auction import auction_batch
+    from repro.core.matching.hungarian import hungarian_batch
+    from repro.core.similarity import _cosine_block
+
+    return (_run_refinement._cache_size(), auction_batch._cache_size(),
+            hungarian_batch._cache_size(), _cosine_block._cache_size())
+
+
+def test_engine_steady_state_zero_recompiles(small_world):
+    """The request-engine tentpole invariant (DESIGN.md §3.2): after
+    warmup, a steady-state serving sweep of VARYING batch sizes within
+    one pow2 bucket — different cohort compositions, different verify
+    round shapes, stream-cache hits and misses — compiles NOTHING:
+    refinement scans, both solvers, and the provider similarity blocks
+    all reuse pow2-bucketed programs."""
+    from repro.runtime.engine import RequestEngine
+
+    coll, sim = small_world
+    params = SearchParams(k=5, alpha=0.8, chunk_size=64, verify_batch=8,
+                          verifier="hybrid")
+    pool = sample_queries(coll, 8, seed=3)
+    sweep = [5, 6, 7, 8, 6, 5]           # one pow2 bucket (pads to 8)
+    rng = np.random.default_rng(4)
+    batches = [[pool[i] for i in rng.choice(8, size=bs, replace=False)]
+               for bs in sweep]
+
+    def serve_all():
+        eng = RequestEngine(coll, sim, params, partitions=2)
+        eng.warmup(pool)
+        for batch in batches:
+            eng.serve(batch)
+
+    serve_all()                          # prime every bucketed shape
+    before = _jit_cache_sizes()
+    serve_all()                          # steady state: zero recompiles
+    assert _jit_cache_sizes() == before
+
+
+def test_fused_engine_steady_state_zero_recompiles(small_world):
+    """Same invariant through the fused device-wave engine: wave configs
+    depend only on pow2-padded shapes, so a steady-state sweep of batch
+    sizes within one pow2 bucket reuses the compiled wave programs."""
+    from repro.core.wave import _wave_fn
+    from repro.runtime.engine import RequestEngine
+
+    coll, sim = small_world
+    params = SearchParams(k=5, alpha=0.8, chunk_size=64, verify_batch=8,
+                          fused="interpret")
+    pool = sample_queries(coll, 8, seed=3)
+    batches = [pool[:bs] for bs in (5, 6, 7, 8, 6)]
+
+    def serve_all():
+        eng = RequestEngine(coll, sim, params, partitions=2,
+                            schedule="fused")
+        assert eng.schedule == "fused"
+        for batch in batches:
+            eng.serve(batch)
+
+    serve_all()                          # prime the wave-config grid
+    before = (_wave_fn.cache_info().currsize, _jit_cache_sizes())
+    serve_all()                          # steady state: zero recompiles
+    assert (_wave_fn.cache_info().currsize, _jit_cache_sizes()) == before
+
+
 def test_fused_wave_variants_shared_across_batches(small_world):
     """The wave program's static config depends only on pow2-padded
     shapes: rerunning the fused schedule with a different batch of the
