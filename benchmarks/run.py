@@ -27,7 +27,7 @@ def main(argv=None) -> None:
     if want("kernels"):
         _banner("kernel microbench (us/call)")
         from . import kernels
-        kernels.main()
+        kernels.main([])
 
     if want("pruning"):
         _banner("Table II: filter pruning power")

@@ -9,6 +9,14 @@ postings are fetched with one vectorized gather (DESIGN.md §2).
                    array* — this is the per-(set, element) slot used by the
                    refinement phase to mark candidate-side elements as
                    matched (the t-side occupancy of the greedy matching).
+                   int32 whenever the repository fits (``types.slot_dtype``)
+                   — half the event bytes of the historical int64 layout.
+
+``device_arrays`` uploads the CSR triplet once per index lifetime (cached
+on the instance) for the fused wave's device-resident event expansion
+(DESIGN.md §3.3): stream tuples expand to posting-level events *in-trace*,
+so waves consume the compact token stream instead of host-expanded event
+arrays.
 """
 from __future__ import annotations
 
@@ -16,14 +24,15 @@ import dataclasses
 
 import numpy as np
 
-from .types import SetCollection
+from .types import SetCollection, assert_int32, slot_dtype
 
 
 @dataclasses.dataclass(frozen=True)
 class InvertedIndex:
     tok_indptr: np.ndarray    # (vocab+1,) int64
     posting_set: np.ndarray   # (total_postings,) int32
-    posting_slot: np.ndarray  # (total_postings,) int64  (flat token-array slot)
+    posting_slot: np.ndarray  # (total_postings,) int32 flat token-array slot
+    #                           (int64 only above 2**31 slots)
     vocab_size: int
 
     @property
@@ -35,7 +44,11 @@ class InvertedIndex:
         return self.posting_set[lo:hi], self.posting_slot[lo:hi]
 
     def posting_counts(self) -> np.ndarray:
-        return np.diff(self.tok_indptr)
+        cached = self.__dict__.get("_counts")
+        if cached is None:
+            cached = np.diff(self.tok_indptr)
+            object.__setattr__(self, "_counts", cached)
+        return cached
 
     @staticmethod
     def build(coll: SetCollection) -> "InvertedIndex":
@@ -52,9 +65,39 @@ class InvertedIndex:
         return InvertedIndex(
             tok_indptr=tok_indptr,
             posting_set=set_of_slot[order],
-            posting_slot=order,
+            posting_slot=order.astype(slot_dtype(coll.total_tokens)),
             vocab_size=coll.vocab_size,
         )
+
+    def device_arrays(self):
+        """Device-resident CSR triplet (indptr, posting_set, posting_slot)
+        for in-trace event expansion — uploaded ONCE per index lifetime
+        and cached on the instance, killing the per-wave host->device
+        event transfer (DESIGN.md §3.3).
+
+        ``indptr`` narrows to int32 (posting counts are bounded by
+        ``total_postings``, asserted < 2**31); posting arrays pad by one
+        sentinel entry so clipped pad-event gathers stay in bounds even
+        for an empty index.
+        """
+        cached = self.__dict__.get("_device_arrays")
+        if cached is None:
+            import jax.numpy as jnp
+
+            from ..runtime import instrument
+
+            assert_int32(self.total_postings, "total_postings")
+            instrument.record("h2d:index_upload")
+            pad = np.zeros(1, np.int32)
+            cached = (
+                jnp.asarray(self.tok_indptr.astype(np.int32)),
+                jnp.asarray(np.concatenate(
+                    [self.posting_set.astype(np.int32), pad - 1])),
+                jnp.asarray(np.concatenate(
+                    [self.posting_slot.astype(np.int32), pad])),
+            )
+            object.__setattr__(self, "_device_arrays", cached)
+        return cached
 
     def memory_bytes(self) -> int:
         return (self.tok_indptr.nbytes + self.posting_set.nbytes

@@ -91,6 +91,20 @@ class VerifierPool:
         self.sim = sim_provider
         self.params = params
         self.eps_schedule = make_eps_schedule(params.auction_eps)
+        # Collection-level candidate pad: every solver row is padded to
+        # the pow2 cover of the LARGEST set in the pool's collection —
+        # a composition-independent constant, so (a) an entry's padded
+        # shape never depends on which other requests share its round
+        # (the auction is NOT bitwise padding-invariant, so a
+        # composition-dependent c_pad would break search ==
+        # search_batch), and (b) rounds collapse to one solver dispatch
+        # per nq bucket instead of one per observed candidate-width
+        # bucket — the dominant host<->device round-trip count of the
+        # fused schedule's continuation (DESIGN.md §3.3).  The fused
+        # wave pays the same cover for its dense operands
+        # (``wave._partition_operands``).
+        self._c_pad = _pad_pow2(
+            int(coll.set_sizes.max()) if coll.num_sets else 1)
 
     # ---------------------------------------------------------- weights
     # Cap on the candidate tokens one fused pairwise call may cover: the
@@ -178,7 +192,7 @@ class VerifierPool:
         changes a row's result."""
         groups: dict = {}
         for i, (mats, nq, _theta) in enumerate(entries):
-            key = (_pad_pow2(nq), _pad_pow2(max(m.shape[1] for m in mats)))
+            key = (_pad_pow2(nq), self._c_pad)
             groups.setdefault(key, []).append(i)
         for (nq_pad, c_pad), idxs in groups.items():
             rows = sum(len(entries[i][0]) for i in idxs)

@@ -33,8 +33,9 @@ import numpy as np
 
 from .filters import compute_iub, kth_largest, prune_mask
 from .inverted_index import InvertedIndex
-from .token_stream import EventStream, pad_events
+from .token_stream import EventStream, pack_events_segmented, pad_events
 from .types import SearchStats
+from ..kernels.ref import refine_events_packed_ref, refine_events_ref
 from ..runtime import instrument
 
 
@@ -68,12 +69,51 @@ def refine_carry_init(num_sets: int, q_words: int, total_slots: int):
     )
 
 
-def refine_chunk_step(state, chunk, cap, k: int, ub_mode: str):
-    """One chunk of the refinement scan: sequential greedy admission over
-    the chunk's events, then one masked filter pass.  Returns
+def refine_chunk_step(state, chunk, cap, k: int, ub_mode: str,
+                      layout: str = "serial"):
+    """One chunk of the refinement scan: greedy admission over the
+    chunk's events, then one masked filter pass.  Returns
     (carry, n_killed); suitable for ``lax.scan`` directly and for the
-    fused wave program's embedded scan."""
+    fused wave program's embedded scan.
+
+    ``layout`` selects the admission schedule (identical bits either
+    way — asserted across ub_modes x chunk sizes x partitions in
+    tests/test_refinement_segmented.py):
+
+    * ``"serial"`` — the paper's per-event loop: one sequential device
+      step per event (E scalar scatters per chunk).
+    * ``"segmented"`` — the set-segmented parallel scan (DESIGN.md §2):
+      admission walks rank *levels* (at most one event per set each) as
+      vectorized scatters, sequential only along each set's own short
+      segment.  Two chunk forms are accepted: the lane-packed (W, L)
+      arrays plus a trailing per-chunk ``s_now`` scalar
+      (``token_stream.pack_events_segmented`` — the standalone host
+      path), or flat (E,) arrays plus a trailing within-set rank vector
+      (the fused wave's in-trace form after device-side event
+      expansion, which cannot compact to data-dependent lane counts).
+      Cross-set events commute (all mutated state is per-set and each
+      flat slot belongs to one set), so only the within-set order the
+      levels preserve is load-bearing.
+    """
     S, l, T, d, seen, alive, qmatched, qseen, slot_matched, theta_lb = state
+    if layout == "segmented":
+        c_set, c_q, c_slot, c_sim, tail = chunk
+        admit_state = (S, l, T, d, seen, alive, qmatched, qseen,
+                       slot_matched)
+        if c_set.ndim == 2:              # lane-packed (W, L) + s_now
+            (S, l, T, d, seen, qmatched, qseen, slot_matched) = \
+                refine_events_packed_ref(admit_state, c_set, c_q, c_slot,
+                                         c_sim)
+            s_now = tail
+        else:                            # flat (E,) + within-set ranks
+            (S, l, T, d, seen, qmatched, qseen, slot_matched) = \
+                refine_events_ref(admit_state, c_set, c_q, c_slot, c_sim,
+                                  tail)
+            s_now = c_sim[-1]
+        return _chunk_filter_pass(
+            (S, l, T, d, seen, alive, qmatched, qseen, slot_matched,
+             theta_lb), s_now, cap, k, ub_mode)
+    assert layout == "serial", layout
     c_set, c_q, c_slot, c_sim = chunk
     chunk_len = c_set.shape[0]
 
@@ -115,9 +155,16 @@ def refine_chunk_step(state, chunk, cap, k: int, ub_mode: str):
     (S, l, T, d, seen, qmatched, qseen, slot_matched) = jax.lax.fori_loop(
         0, chunk_len, ev_body,
         (S, l, T, d, seen, qmatched, qseen, slot_matched))
+    return _chunk_filter_pass(
+        (S, l, T, d, seen, alive, qmatched, qseen, slot_matched, theta_lb),
+        c_sim[-1], cap, k, ub_mode)
 
-    # --- vectorized filter pass (per chunk) -----------------------------
-    s_now = c_sim[-1]
+
+def _chunk_filter_pass(state, s_now, cap, k: int, ub_mode: str):
+    """Vectorized per-chunk filter pass (theta refresh + UB filter) —
+    shared by both admission layouts; ``s_now`` is the chunk's final
+    stream-order sim (a valid stream position in every layout)."""
+    S, l, T, d, seen, alive, qmatched, qseen, slot_matched, theta_lb = state
     theta_lb = jnp.maximum(theta_lb, kth_largest(S, k))
     iub = compute_iub(S, l, T, d, cap, s_now, seen, ub_mode)
     killed = prune_mask(iub, theta_lb, seen, alive)
@@ -142,15 +189,25 @@ def refine_finalize(state, cap, alpha, k: int, ub_mode: str):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "num_sets", "q_words", "total_slots", "ub_mode"))
-def _run_refinement(ev_set, ev_q, ev_slot, ev_sim, cap, k: int,
+    static_argnames=("k", "num_sets", "q_words", "total_slots", "ub_mode",
+                     "layout"))
+def _run_refinement(ev_set, ev_q, ev_slot, ev_sim, ev_snow, cap, k: int,
                     num_sets: int, q_words: int, total_slots: int,
-                    ub_mode: str, alpha):
-    """Scan all chunks.  ev_* are (n_chunks, chunk)."""
+                    ub_mode: str, layout: str, alpha):
+    """Scan all chunks.  Serial layout: ev_* are (n_chunks, chunk) and
+    ``ev_snow`` is a zero-size placeholder.  Segmented layout: ev_* are
+    the lane-packed (n_chunks, W, L) arrays and ``ev_snow`` the
+    per-chunk final stream-order sim (see
+    ``token_stream.pack_events_segmented``)."""
     state0 = refine_carry_init(num_sets, q_words, total_slots)
+    if layout == "segmented":
+        chunks = (ev_set, ev_q, ev_slot, ev_sim, ev_snow)
+    else:
+        chunks = (ev_set, ev_q, ev_slot, ev_sim)
     state, killed_per_chunk = jax.lax.scan(
-        lambda s, c: refine_chunk_step(s, c, cap, k, ub_mode),
-        state0, (ev_set, ev_q, ev_slot, ev_sim))
+        lambda s, c: refine_chunk_step(s, c, cap, k, ub_mode,
+                                       layout=layout),
+        state0, chunks)
     S, ub_final, seen, alive, theta_lb, killed_final = refine_finalize(
         state, cap, alpha, k, ub_mode)
     return (S, ub_final, seen, alive, theta_lb,
@@ -159,10 +216,18 @@ def _run_refinement(ev_set, ev_q, ev_slot, ev_sim, cap, k: int,
 
 def _dispatch_refinement(events: EventStream, set_sizes: np.ndarray, nq: int,
                          total_slots: int, k: int, alpha: float,
-                         chunk_size: int, ub_mode: str):
+                         chunk_size: int, ub_mode: str,
+                         layout: str = "segmented"):
     """Launch the jit'd refinement scan; returns (device results, n_chunks)
     without forcing the computation (JAX dispatch is async)."""
-    ev_set, ev_q, ev_slot, ev_sim = pad_events(events, chunk_size)
+    padded = pad_events(events, chunk_size)
+    n_chunks = padded[0].shape[0]
+    if layout == "segmented":
+        ev_set, ev_q, ev_slot, ev_sim, ev_snow = \
+            pack_events_segmented(*padded)
+    else:
+        ev_set, ev_q, ev_slot, ev_sim = padded
+        ev_snow = np.zeros(0, np.float32)
     cap = jnp.minimum(jnp.asarray(set_sizes, jnp.int32), jnp.int32(nq))
     # pow2 bitmask width: bounds jit variants to O(log |Q|) shapes
     q_words = max(1, -(-nq // 32))
@@ -173,9 +238,9 @@ def _dispatch_refinement(events: EventStream, set_sizes: np.ndarray, nq: int,
     instrument.record("h2d:refine_dispatch")
     out = _run_refinement(
         jnp.asarray(ev_set), jnp.asarray(ev_q), jnp.asarray(ev_slot),
-        jnp.asarray(ev_sim), cap, k, len(set_sizes), q_words, total_slots,
-        ub_mode, jnp.float32(alpha))
-    return out, ev_set.shape[0]
+        jnp.asarray(ev_sim), jnp.asarray(ev_snow), cap, k, len(set_sizes),
+        q_words, total_slots, ub_mode, layout, jnp.float32(alpha))
+    return out, n_chunks
 
 
 def _materialize_refinement(out, n_chunks: int,
@@ -198,7 +263,9 @@ def _materialize_refinement(out, n_chunks: int,
 def run_refinement_many(event_streams, nqs, set_sizes: np.ndarray,
                         total_slots: int, k: int, alpha: float,
                         chunk_size: int = 256,
-                        ub_mode: str = "sound") -> "list[RefinementResult]":
+                        ub_mode: str = "sound",
+                        layout: str = "segmented"
+                        ) -> "list[RefinementResult]":
     """THE refinement entry point: any number of (events, |Q|) pairs with
     pipelined dispatch.
 
@@ -211,7 +278,8 @@ def run_refinement_many(event_streams, nqs, set_sizes: np.ndarray,
     partitions with different ``set_sizes``.
     """
     launched = [_dispatch_refinement(ev, set_sizes, int(nq), total_slots, k,
-                                     alpha, chunk_size, ub_mode)
+                                     alpha, chunk_size, ub_mode,
+                                     layout=layout)
                 for ev, nq in zip(event_streams, nqs)]
     return [_materialize_refinement(out, n_chunks, ev)
             for (out, n_chunks), ev in zip(launched, event_streams)]
@@ -220,10 +288,11 @@ def run_refinement_many(event_streams, nqs, set_sizes: np.ndarray,
 def run_refinement(events: EventStream, set_sizes: np.ndarray, nq: int,
                    total_slots: int, k: int, alpha: float,
                    chunk_size: int = 256,
-                   ub_mode: str = "sound") -> RefinementResult:
+                   ub_mode: str = "sound",
+                   layout: str = "segmented") -> RefinementResult:
     """Single-stream refinement (compatibility wrapper)."""
     return run_refinement_many([events], [nq], set_sizes, total_slots, k,
-                               alpha, chunk_size, ub_mode)[0]
+                               alpha, chunk_size, ub_mode, layout=layout)[0]
 
 
 def run_refinement_batch(event_streams, queries, set_sizes: np.ndarray,

@@ -114,6 +114,15 @@ class ExecutionPlan:
     itself).
     """
 
+    # Plan-query ring bounds (DESIGN.md §8 item 9): once more than
+    # ``compact_threshold`` of a plan's query slots are retired
+    # tombstones (and the list is at least ``compact_min`` long),
+    # ``retire_tiles`` compacts the append-only list in place — a
+    # weeks-long engine's plan stays proportional to its LIVE requests
+    # instead of growing with every request ever served.
+    compact_threshold: float = 0.5
+    compact_min: int = 64
+
     def __init__(self, indexes: Sequence, queries: Sequence[np.ndarray],
                  pool_coll: SetCollection,
                  theta0: Optional[Sequence[float]] = None,
@@ -158,15 +167,30 @@ class ExecutionPlan:
         self.stats.tiles = len(self.tiles)
         return range(lo, len(self.queries)), new
 
-    def retire_tiles(self, qis) -> None:
+    def retire_tiles(self, qis) -> "Optional[dict]":
         """Drop responded queries' tiles (and query arrays) so a
-        long-running engine plan does not accumulate finished work; their
-        queries list slots are tombstoned (never touched again — tiles
-        are gone)."""
+        long-running engine plan does not accumulate finished work;
+        their queries-list slots are tombstoned, and once tombstones
+        exceed ``compact_threshold`` of a ``compact_min``-sized list the
+        list is compacted in place (the bounded ring, DESIGN.md §8 item
+        9).  Returns the {old_qi: new_qi} remap when a compaction
+        happened (callers holding qi-indexed state — the request engine
+        — must apply it), else None."""
         gone = set(int(qi) for qi in qis)
         self.tiles = [t for t in self.tiles if t.qi not in gone]
         for qi in gone:
             self.queries[qi] = None
+        retired = sum(1 for q in self.queries if q is None)
+        if (len(self.queries) < self.compact_min
+                or retired <= self.compact_threshold * len(self.queries)):
+            return None
+        live = [qi for qi, q in enumerate(self.queries) if q is not None]
+        remap = {old: new for new, old in enumerate(live)}
+        self.queries = [self.queries[old] for old in live]
+        self.theta0 = self.theta0[live]
+        for t in self.tiles:
+            t.qi = remap[t.qi]
+        return remap
 
     def results(self) -> List[List[SearchResult]]:
         """Per-query, per-partition (partition-ascending) local results."""
@@ -187,7 +211,8 @@ def _launch_tile(tile: _Tile, stream, query, params: SearchParams) -> None:
     tile.events = events
     tile.launched = _dispatch_refinement(
         events, coll.set_sizes, len(query), coll.total_tokens,
-        params.k, params.alpha, params.chunk_size, params.ub_mode)
+        params.k, params.alpha, params.chunk_size, params.ub_mode,
+        layout=params.refine_layout)
 
 
 def _materialize_tile(tile: _Tile) -> None:
@@ -430,14 +455,19 @@ def _run_fused(plan: ExecutionPlan, sim, params: SearchParams,
     runner = wave_runner_for(sim, params, mesh=mesh)
     B_pad = _pow2(max(1, len(plan.queries)))
     theta_dev = runner.init_theta(plan.theta0, B_pad)
+    # ONE host->device payload for the whole plan: the compact stream
+    # tuples (partition-independent) — each wave expands them in-trace
+    # through its partition's device-resident index (DESIGN.md §3.3)
+    stream_ops = runner.stream_operands(plan.queries, streams, B_pad)
 
     # Dispatch EVERY wave before materializing any (the overlap idea, one
     # level up): wave p+1's program queues behind wave p on-device while
-    # the host expands events for later partitions.
+    # the host sizes and dispatches later partitions' waves.
     launches = []
     for index in plan.indexes:
         launch, theta_dev = runner.launch_wave(index, plan.queries,
-                                               streams, theta_dev)
+                                               streams, theta_dev,
+                                               stream_ops=stream_ops)
         launches.append(launch)
         plan.stats.waves += 1
         plan.stats.device_rounds += launch.cfg.rounds

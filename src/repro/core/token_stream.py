@@ -69,7 +69,9 @@ class EventStream:
 
     set_id: np.ndarray   # (E,) int32
     q_pos: np.ndarray    # (E,) int32
-    slot: np.ndarray     # (E,) int64 — flat token-array slot (t-side identity)
+    slot: np.ndarray     # (E,) int32 — flat token-array slot (t-side
+    #                      identity; int64 only when the repository
+    #                      overflows int32 slots — see types.slot_dtype)
     sim: np.ndarray      # (E,) float32, non-increasing
     n_tuples: int        # stream tuples that produced these events
 
@@ -388,7 +390,7 @@ def expand_to_events(stream: TokenStream, index: InvertedIndex) -> EventStream:
         slot = index.posting_slot[gather]
     else:
         set_id = np.zeros(0, dtype=np.int32)
-        slot = np.zeros(0, dtype=np.int64)
+        slot = np.zeros(0, dtype=index.posting_slot.dtype)
     return EventStream(set_id=set_id, q_pos=q_pos, slot=slot, sim=sim,
                        n_tuples=len(stream))
 
@@ -405,10 +407,97 @@ def pad_events(events: EventStream, chunk: int):
     def _pad(x, fill):
         return np.concatenate([x, np.full(pad, fill, dtype=x.dtype)])
 
-    last_sim = events.sim[-1] if e else np.float32(1.0)
+    # pad sims repeat the final (lowest) real sim — a valid stream
+    # position for the filter pass.  An EMPTY stream has no valid
+    # position: pad with 0.0 (not 1.0 — a 1.0 s_now would inflate the
+    # pad chunk's unseen-remainder term if any set were ever marked
+    # seen; with 0.0 the pad chunk is inert by construction).
+    last_sim = events.sim[-1] if e else np.float32(0.0)
     return (
         _pad(events.set_id, -1).reshape(n_chunks, chunk),
         _pad(events.q_pos, 0).reshape(n_chunks, chunk),
         _pad(events.slot, 0).reshape(n_chunks, chunk),
         _pad(events.sim, last_sim).reshape(n_chunks, chunk),
     )
+
+
+def event_ranks(ev_set: np.ndarray) -> np.ndarray:
+    """Within-(chunk, set) occurrence index of every event — the
+    *set-segmented* layout metadata of the refinement scan (DESIGN.md
+    §2): events with rank t form level t of the segmented admission
+    schedule, and within a level all events touch distinct sets.
+
+    ``ev_set`` is the (n_chunks, chunk) padded set-id array from
+    :func:`pad_events`; returns an int32 array of the same shape.
+    Padding events (set -1) receive ranks too (they group as one
+    segment) but are masked out of both the admission and the
+    level-count computation by their sentinel set id.
+    """
+    n, c = ev_set.shape
+    m = n * c
+    if m == 0:
+        return np.zeros((n, c), np.int32)
+    flat_set = ev_set.reshape(-1).astype(np.int64)
+    iota = np.arange(m, dtype=np.int64)
+    chunk_of = iota // c
+    order = np.lexsort((iota, flat_set, chunk_of))   # stable within segment
+    key_chunk = chunk_of[order]
+    key_set = flat_set[order]
+    start = np.ones(m, bool)
+    start[1:] = (key_chunk[1:] != key_chunk[:-1]) \
+        | (key_set[1:] != key_set[:-1])
+    seg_start = np.maximum.accumulate(np.where(start, iota, 0))
+    rank = np.empty(m, np.int32)
+    rank[order] = (iota - seg_start).astype(np.int32)
+    return rank.reshape(n, c)
+
+
+def pack_events_segmented(ev_set: np.ndarray, ev_q: np.ndarray,
+                          ev_slot: np.ndarray, ev_sim: np.ndarray):
+    """Lane-pack padded event chunks into the set-segmented (W, L)
+    layout the segmented refinement scan consumes (DESIGN.md §2).
+
+    Row ``t`` of a chunk holds its level-``t`` events — the rank-``t``
+    event of every set that has one — compacted left into ``L`` fixed-
+    width pow2 lanes (set id -1 pads).  Within a row all events touch
+    pairwise-distinct sets, so the scan admits a whole row as one
+    vectorized scatter; down the rows each set's events appear in
+    stream order, preserving the only load-bearing order.  ``W`` (pow2)
+    covers the deepest per-set segment and ``L`` (pow2) the widest
+    level across all chunks, so the packed arrays are at most a small
+    constant larger than the flat chunks while the sequential depth
+    drops from ``chunk`` to ``W``.
+
+    Returns (set (n, W, L), q, slot, sim, s_now (n,)) — ``s_now`` is
+    each chunk's final stream-order sim (the filter-pass position that
+    the packed layout no longer encodes positionally).
+    """
+    n, c = ev_set.shape
+    ranks = event_ranks(ev_set)
+    flat_valid = (ev_set >= 0).reshape(-1)
+    flat_rank = ranks.reshape(-1).astype(np.int64)
+    m = n * c
+    iota = np.arange(m, dtype=np.int64)
+    chunk_of = iota // c
+    vidx = iota[flat_valid]
+    order = np.lexsort((vidx, flat_rank[flat_valid], chunk_of[flat_valid]))
+    vs = vidx[order]
+    nv = len(vs)
+    key_c, key_r = chunk_of[vs], flat_rank[vs]
+    start = np.ones(nv, bool)
+    if nv:
+        start[1:] = (key_c[1:] != key_c[:-1]) | (key_r[1:] != key_r[:-1])
+    lane = np.arange(nv) - np.maximum.accumulate(
+        np.where(start, np.arange(nv), 0)) if nv else np.zeros(0, np.int64)
+    W = pow2(int(key_r.max()) + 1 if nv else 1)
+    L = pow2(int(lane.max()) + 1 if nv else 1)
+
+    set3 = np.full((n, W, L), -1, np.int32)
+    q3 = np.zeros((n, W, L), np.int32)
+    slot3 = np.zeros((n, W, L), ev_slot.dtype)
+    sim3 = np.zeros((n, W, L), np.float32)
+    set3[key_c, key_r, lane] = ev_set.reshape(-1)[vs]
+    q3[key_c, key_r, lane] = ev_q.reshape(-1)[vs]
+    slot3[key_c, key_r, lane] = ev_slot.reshape(-1)[vs]
+    sim3[key_c, key_r, lane] = ev_sim.reshape(-1)[vs]
+    return set3, q3, slot3, sim3, ev_sim[:, -1].astype(np.float32)

@@ -27,6 +27,26 @@ def pow2(n: int, lo: int = 1) -> int:
     return p
 
 
+def slot_dtype(total_slots: int):
+    """Narrowest integer dtype for flat token-array slots (and posting
+    ids): int32 whenever the repository fits — always at bench scales —
+    halving event-transfer bytes and scatter width.  int64 repositories
+    (>= 2**31 flat slots) keep the wide dtype; callers that *require*
+    the narrow form (device uploads) assert via :func:`assert_int32`."""
+    return np.int32 if total_slots < 2 ** 31 else np.int64
+
+
+def assert_int32(n: int, what: str) -> int:
+    """Guard a count that is about to be narrowed to int32 on device.
+    A real exception (not ``assert``): silent wraparound here would mean
+    wrong search results, and ``python -O`` must not strip the guard."""
+    if n >= 2 ** 31:
+        raise ValueError(
+            f"{what} = {n} overflows int32 — device-resident expansion "
+            f"and the int32 posting/slot layout cap at 2**31-1 entries")
+    return n
+
+
 def pad_ids_pow2(ids: np.ndarray, lo: int = 8) -> np.ndarray:
     """Pad an id vector to a pow2 length with id 0.  Callers slice the
     padded rows/cols off before any value is consumed, and provider ops
@@ -117,6 +137,11 @@ class SearchParams:
     # generate token streams with the cosine_topk Pallas kernel instead of
     # the jnp provider sweep (interpret mode off-TPU; bit-identical streams)
     stream_use_kernel: bool = False
+    # refinement admission schedule (DESIGN.md §2): 'segmented' = the
+    # set-segmented parallel scan (rank levels of chunk-wide vectorized
+    # scatters — the default); 'serial' = the per-event reference loop.
+    # Bit-identical results either way (tests/test_refinement_segmented.py)
+    refine_layout: str = "segmented"
 
     def __post_init__(self):
         assert self.k >= 1
@@ -125,6 +150,7 @@ class SearchParams:
         assert self.ub_mode in ("sound", "paper")
         assert self.fused in ("auto", "interpret", "off")
         assert self.wave_rounds >= 0
+        assert self.refine_layout in ("serial", "segmented")
 
 
 @dataclasses.dataclass

@@ -4,9 +4,21 @@ One device program per partition *wave* — the partition's (query x
 partition) tiles for the whole request batch — chaining what the overlap
 schedule round-trips through the host (DESIGN.md §8 item 6, resolved):
 
+  Stage A0 device-resident event expansion (DESIGN.md §3.3): the wave
+           consumes the COMPACT token stream — (token, q, sim) tuples,
+           uploaded once per plan since streams are partition-
+           independent — and expands it to posting-level events
+           *in-trace* through the partition's device-resident CSR
+           inverted index (``InvertedIndex.device_arrays``, uploaded
+           once per index lifetime), a searchsorted-on-cumsum gather
+           mirroring ``token_stream.expand_to_events`` bit for bit.
+           This kills the per-tile host expansion and the event-array
+           host->device transfer — the largest remaining per-wave
+           upload (events outnumber tuples by the mean posting length);
   Stage A  all K refinement chunk scans (`lax.scan` over the shared
-           (carry, chunk) -> carry step from ``core.refinement``,
-           vmapped over the wave's queries);
+           (carry, chunk) -> carry step from ``core.refinement``, set-
+           segmented admission with in-trace within-set ranks, vmapped
+           over the wave's queries);
   Stage B  candidate compaction by prefix-sum mask
            (``kernels.refine_verify.compact_indices``);
   Stage C  theta_lb update + on-device bound exchange
@@ -38,12 +50,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, NamedTuple, Sequence
+from typing import List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.ref import event_ranks_ref
 from ..kernels.refine_verify import candidate_weights, compact_indices
 from ..runtime import instrument
 from ..runtime.sharding import _round_down_f32, all_reduce_max_traced
@@ -51,11 +64,51 @@ from .matching.auction import _auction_single, make_eps_schedule
 from .matching.hungarian import _hungarian_padded
 from .refinement import (refine_carry_init, refine_chunk_step,
                          refine_finalize)
-from .token_stream import expand_to_events, pad_events
 from .types import SearchParams
 from .types import pow2 as _pow2
 
 _NEGINF = jnp.float32(-jnp.inf)
+
+
+def expand_events_traced(tok, qp, sm, indptr, posting_set, posting_slot,
+                         n_chunks: int, chunk: int):
+    """Device-resident event expansion (DESIGN.md §3.3): one query's
+    compact stream tuples -> padded event chunks, in-trace.
+
+    The searchsorted-on-cumsum gather mirror of
+    ``token_stream.expand_to_events`` + ``pad_events``, bit for bit:
+    ``reps[i]`` postings per tuple, event e produced by the tuple whose
+    cumulative posting count first exceeds e, posting picked by the
+    within-tuple offset.  ``tok`` pads with -1 (zero postings);
+    ``posting_set``/``posting_slot`` carry one trailing sentinel entry
+    (-1 / 0) that every pad event's clipped gather hits, and pad sims
+    repeat the final real sim (0.0 for an empty expansion) — exactly
+    the host pad semantics.  Returns (set, q, slot, sim) arrays of
+    shape (n_chunks, chunk).
+    """
+    E_pad = n_chunks * chunk
+    t_pad = tok.shape[0]
+    n_post = posting_set.shape[0] - 1            # trailing sentinel
+    reps = jnp.where(tok >= 0, indptr[tok + 1] - indptr[tok], 0)
+    ends = jnp.cumsum(reps)                      # event offset per tuple
+    total = ends[-1]
+    iota = jnp.arange(E_pad, dtype=jnp.int32)
+    ti = jnp.minimum(jnp.searchsorted(ends, iota, side="right"), t_pad - 1)
+    valid = iota < total
+    tokc = jnp.maximum(tok[ti], 0)
+    gather = jnp.where(valid,
+                       indptr[tokc] + (iota - (ends[ti] - reps[ti])),
+                       n_post)
+    set_id = posting_set[gather]
+    slot = posting_slot[gather]
+    q = jnp.where(valid, qp[ti], 0)
+    last_ti = jnp.minimum(
+        jnp.searchsorted(ends, jnp.maximum(total - 1, 0), side="right"),
+        t_pad - 1)
+    last_sim = jnp.where(total > 0, sm[last_ti], jnp.float32(0.0))
+    sim = jnp.where(valid, sm[ti], last_sim)
+    return (set_id.reshape(n_chunks, chunk), q.reshape(n_chunks, chunk),
+            slot.reshape(n_chunks, chunk), sim.reshape(n_chunks, chunk))
 
 
 def fused_available(params: SearchParams, sim_provider) -> bool:
@@ -85,6 +138,7 @@ class WaveConfig(NamedTuple):
     k: int
     n_chunks: int
     chunk: int
+    n_tuples: int                    # pow2 stream-tuple pad (Stage A0 input)
     nq_pad: int
     c_pad: int
     B: int
@@ -92,6 +146,7 @@ class WaveConfig(NamedTuple):
     rounds: int
     ub_mode: str
     verifier: str
+    refine_layout: str
     alpha: float
     interpret: bool
     use_kernel: bool
@@ -196,25 +251,36 @@ def _wave_fn(cfg: WaveConfig, mesh):
         live = live & ~dead
         return lb, ub, live, verified, th, n_drop, n_early, n_full
 
-    def fn(ev_set, ev_q, ev_slot, ev_sim, qtok, nqs, theta, table_n,
-           set_tok, set_sizes, eps):
+    def fn(st_tok, st_q, st_sim, qtok, nqs, theta, table_n,
+           set_tok, set_sizes, eps, indptr, posting_set, posting_slot):
         sizes32 = set_sizes.astype(jnp.int32)
 
         # ---- Stage A: K refinement chunk scans, vmapped over the wave ----
-        def refine(es, eq, esl, esim, nq):
+        # (each begins with Stage A0, the in-trace event expansion)
+        def refine(tok, qp, sm, nq):
+            chunks = expand_events_traced(
+                tok, qp, sm, indptr, posting_set, posting_slot,
+                cfg.n_chunks, cfg.chunk)
+            if cfg.refine_layout == "segmented":
+                # within-set ranks per chunk (the set-segmented layout's
+                # level index), computed in-trace — lane compaction is
+                # host-only (data-dependent widths), so the wave runs
+                # the flat masked-level form of the same scan
+                chunks = chunks + (jax.vmap(event_ranks_ref)(chunks[0]),)
             cap = jnp.minimum(sizes32, nq)
             st0 = refine_carry_init(cfg.num_sets, cfg.q_words,
                                     cfg.total_slots)
             st, killed = jax.lax.scan(
                 lambda s, c: refine_chunk_step(s, c, cap, cfg.k,
-                                               cfg.ub_mode),
-                st0, (es, eq, esl, esim))
+                                               cfg.ub_mode,
+                                               layout=cfg.refine_layout),
+                st0, chunks)
             S, ub, seen, alive, th, killed_f = refine_finalize(
                 st, cap, alpha, cfg.k, cfg.ub_mode)
             return S, ub, seen, alive, th, jnp.sum(killed) + killed_f
 
         S, ub0, seen, alive, th_ref, pruned_ref = jax.vmap(refine)(
-            ev_set, ev_q, ev_slot, ev_sim, nqs)
+            st_tok, st_q, st_sim, nqs)
 
         # ---- Stage B: candidate compaction (prefix-sum mask kernel) ----
         surv = seen & alive
@@ -250,7 +316,7 @@ def _wave_fn(cfg: WaveConfig, mesh):
                 jnp.sum(seen, axis=1), pruned_ref,
                 c_post, c_early, c_full, theta)
 
-    return jax.jit(fn, donate_argnums=(6,))
+    return jax.jit(fn, donate_argnums=(5,))
 
 
 # Engine-lifetime runner reuse (DESIGN.md §3.2): keyed by provider/mesh
@@ -285,6 +351,22 @@ class _TileMeta:
     n_tuples: int = 0
     n_events: int = 0
     n_chunks: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamOperands:
+    """Device-resident compact stream input of a plan's waves (§3.3):
+    stacked (B_pad, T_pad) stream tuples + query tokens/lengths, built
+    once per plan and shared by every partition wave."""
+
+    tok: object                      # (B_pad, T_pad) int32, -1 pad
+    q_pos: object                    # (B_pad, T_pad) int32
+    sim: object                      # (B_pad, T_pad) float32
+    qtok: object                     # (B_pad, nq_pad) int32, -1 pad
+    nqs: object                      # (B_pad,) int32
+    n_tuples: int                    # T_pad (pow2)
+    nq_pad: int
+    q_words: int
 
 
 @dataclasses.dataclass
@@ -364,74 +446,89 @@ class WaveRunner:
         t[:len(theta0)] = _round_down_f32(theta0)
         return jnp.asarray(t)
 
+    # ------------------------------------------------------------- streams
+    def stream_operands(self, queries: Sequence[np.ndarray], streams,
+                        B_pad: int) -> "StreamOperands":
+        """Upload the wave input ONCE per plan: the compact stacked
+        stream tuples plus query tokens/lengths.  Streams (and queries)
+        are partition-independent, so every wave of a plan shares these
+        device arrays — with the device-resident index expansion
+        (§3.3) this is the only per-plan host->device payload, replacing
+        the per-wave event-array uploads (events outnumber tuples by
+        the mean posting length)."""
+        t_pad = _pow2(max([len(s) for s in streams] or [1]) or 1)
+        nq_max = max([len(q) for q in queries] or [1])
+        nq_pad = _pow2(max(nq_max, 1))
+        st_tok = np.full((B_pad, t_pad), -1, np.int32)
+        st_q = np.zeros((B_pad, t_pad), np.int32)
+        st_sim = np.zeros((B_pad, t_pad), np.float32)
+        qtok = np.full((B_pad, nq_pad), -1, np.int32)
+        nqs = np.zeros(B_pad, np.int32)
+        for qi, (q, s) in enumerate(zip(queries, streams)):
+            st_tok[qi, :len(s)] = s.token
+            st_q[qi, :len(s)] = s.q_pos
+            st_sim[qi, :len(s)] = s.sim
+            qtok[qi, :len(q)] = q
+            nqs[qi] = len(q)
+        instrument.record("h2d:stream_upload")
+        return StreamOperands(
+            tok=jnp.asarray(st_tok), q_pos=jnp.asarray(st_q),
+            sim=jnp.asarray(st_sim), qtok=jnp.asarray(qtok),
+            nqs=jnp.asarray(nqs), n_tuples=t_pad, nq_pad=nq_pad,
+            q_words=_pow2(max(1, -(-nq_max // 32))))
+
     # -------------------------------------------------------------- launch
     def launch_wave(self, index, queries: Sequence[np.ndarray], streams,
-                    theta_dev) -> "tuple[WaveLaunch, object]":
+                    theta_dev,
+                    stream_ops: "Optional[StreamOperands]" = None
+                    ) -> "tuple[WaveLaunch, object]":
         """Dispatch one partition wave; returns (launch, chained theta).
 
         Nothing is materialized here — JAX async dispatch lets the next
-        wave queue behind this one on-device while the host expands the
-        following partition's events."""
+        wave queue behind this one on-device while the host sizes and
+        dispatches later waves.  The only per-wave host work left is
+        counting each tile's events from the host CSR counts (to size
+        the pow2 chunk grid); expansion itself runs in-trace from
+        ``stream_ops`` (built here when the caller didn't share one
+        across waves) and the index's device-resident CSR arrays."""
         set_tok, sizes32, c_pad = self._partition_operands(index)
+        indptr_dev, pset_dev, pslot_dev = index.inv.device_arrays()
         coll = index.coll
         B_pad = theta_dev.shape[0]
         chunk = self.params.chunk_size
+        if stream_ops is None:
+            stream_ops = self.stream_operands(queries, streams, B_pad)
 
+        counts = index.inv.posting_counts()
         metas: List[_TileMeta] = []
-        padded = []
         for qi, q in enumerate(queries):
-            events = expand_to_events(streams[qi], index.inv)
-            if len(events) == 0:
+            s = streams[qi]
+            n_events = int(counts[s.token].sum())
+            if n_events == 0:
                 metas.append(_TileMeta(empty=True))
-                padded.append(None)
                 continue
-            ev = pad_events(events, chunk)
-            metas.append(_TileMeta(empty=False, n_tuples=events.n_tuples,
-                                   n_events=len(events),
-                                   n_chunks=ev[0].shape[0]))
-            padded.append(ev)
-
+            metas.append(_TileMeta(
+                empty=False, n_tuples=len(s), n_events=n_events,
+                n_chunks=_pow2(max(1, -(-n_events // chunk)))))
         n_max = max([m.n_chunks for m in metas if not m.empty] or [1])
-        nq_max = max([len(q) for q in queries] or [1])
-        nq_pad = _pow2(max(nq_max, 1))
-        q_words = _pow2(max(1, -(-nq_max // 32)))
-
-        ev_set = np.full((B_pad, n_max, chunk), -1, np.int32)
-        ev_q = np.zeros((B_pad, n_max, chunk), np.int32)
-        ev_slot = np.zeros((B_pad, n_max, chunk), np.int64)
-        ev_sim = np.ones((B_pad, n_max, chunk), np.float32)
-        qtok = np.full((B_pad, nq_pad), -1, np.int32)
-        nqs = np.zeros(B_pad, np.int32)
-        for qi, q in enumerate(queries):
-            qtok[qi, :len(q)] = q
-            nqs[qi] = len(q)
-            ev = padded[qi]
-            if ev is None:
-                continue
-            n_i = ev[0].shape[0]
-            ev_set[qi, :n_i] = ev[0]
-            ev_q[qi, :n_i] = ev[1]
-            ev_slot[qi, :n_i] = ev[2]
-            # extra pad chunks repeat the tile's final sim: the filter
-            # pass re-evaluates at the same (valid) stream position, a
-            # no-op (see core.token_stream.pad_events)
-            ev_sim[qi] = ev[3][-1, -1]
-            ev_sim[qi, :n_i] = ev[3]
 
         cfg = WaveConfig(
             num_sets=coll.num_sets, total_slots=coll.total_tokens,
-            q_words=q_words, k=self.params.k, n_chunks=n_max, chunk=chunk,
-            nq_pad=nq_pad, c_pad=c_pad, B=B_pad,
+            q_words=stream_ops.q_words, k=self.params.k, n_chunks=n_max,
+            chunk=chunk, n_tuples=stream_ops.n_tuples,
+            nq_pad=stream_ops.nq_pad, c_pad=c_pad, B=B_pad,
             verify_batch=min(self.params.verify_batch, _WAVE_VB_CAP),
             rounds=self.params.wave_rounds, ub_mode=self.params.ub_mode,
-            verifier=self.params.verifier, alpha=float(self.params.alpha),
+            verifier=self.params.verifier,
+            refine_layout=self.params.refine_layout,
+            alpha=float(self.params.alpha),
             interpret=self.interpret, use_kernel=not self.interpret)
         fn = _wave_fn(cfg, self.mesh)
         instrument.record("h2d:wave_dispatch")
-        out = fn(jnp.asarray(ev_set), jnp.asarray(ev_q),
-                 jnp.asarray(ev_slot), jnp.asarray(ev_sim),
-                 jnp.asarray(qtok), jnp.asarray(nqs), theta_dev,
-                 self.table_n, set_tok, sizes32, self.eps)
+        out = fn(stream_ops.tok, stream_ops.q_pos, stream_ops.sim,
+                 stream_ops.qtok, stream_ops.nqs, theta_dev,
+                 self.table_n, set_tok, sizes32, self.eps,
+                 indptr_dev, pset_dev, pslot_dev)
         return WaveLaunch(out=out, tile_meta=metas, cfg=cfg), out[-1]
 
     # --------------------------------------------------------- materialize

@@ -3,6 +3,8 @@
   cosine_topk     — blocked cosine similarity + running top-k (token stream)
   auction_topk2   — fused profit top-2 (auction verification round)
   compact_indices — prefix-sum mask compaction (fused wave candidate sets)
+  refine_events   — set-segmented greedy admission of a refinement chunk
+                    (VMEM-resident carry, lane-packed levels)
   ssd             — Mamba2 SSD chunked scan (ssm/hybrid architectures)
   flash_attention — causal online-softmax attention (serving/prefill path)
 
@@ -11,8 +13,10 @@ in ``ops.py`` that switches to interpret mode off-TPU.
 """
 from .ops import (auction_topk2, auction_topk2_ref, compact_indices,
                   compact_indices_ref, cosine_topk, cosine_topk_ref,
-                  flash_attention, flash_attention_ref, ssd, ssd_ref)
+                  flash_attention, flash_attention_ref, refine_events,
+                  refine_events_packed_ref, ssd, ssd_ref)
 
 __all__ = ["cosine_topk", "cosine_topk_ref", "auction_topk2",
            "auction_topk2_ref", "compact_indices", "compact_indices_ref",
+           "refine_events", "refine_events_packed_ref",
            "ssd", "ssd_ref", "flash_attention", "flash_attention_ref"]

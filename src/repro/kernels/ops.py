@@ -16,6 +16,7 @@ from . import ref
 from .auction_round import auction_topk2 as _auction_topk2
 from .cosine_topk import cosine_topk as _cosine_topk
 from .flash_attention import flash_attention as _flash_attention
+from .refine_events import refine_events as _refine_events
 from .refine_verify import compact_indices as _compact_indices
 from .ssd_scan import ssd_chunked as _ssd_chunked
 
@@ -34,6 +35,14 @@ def compact_indices(mask):
     """Prefix-sum mask compaction (wave candidate sets).  See
     refine_verify.py."""
     return _compact_indices(jnp.asarray(mask), interpret=_interpret())
+
+
+def refine_events(state, c_set, c_q, c_slot, c_sim):
+    """Set-segmented admission of one lane-packed refinement chunk with a
+    VMEM-resident carry.  See refine_events.py."""
+    return _refine_events(state, jnp.asarray(c_set), jnp.asarray(c_q),
+                          jnp.asarray(c_slot), jnp.asarray(c_sim),
+                          interpret=_interpret())
 
 
 def auction_topk2(wm, prices, bn: int = 256):
@@ -69,6 +78,7 @@ def flash_attention(q, k, v, bq: int = 256, bk: int = 256,
 # re-exported oracles (benchmarks compare against these)
 cosine_topk_ref = ref.cosine_topk_ref
 compact_indices_ref = ref.compact_indices_ref
+refine_events_packed_ref = ref.refine_events_packed_ref
 auction_topk2_ref = ref.auction_topk2_ref
 ssd_ref = ref.ssd_ref
 flash_attention_ref = ref.flash_attention_ref

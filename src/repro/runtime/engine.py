@@ -289,9 +289,21 @@ class RequestEngine:
             waves=req.trace.waves, stream_hit=req.trace.stream_hit,
             deadline_met=req.trace.deadline_met))
         del self._inflight[req.rid]
-        self.plan.retire_tiles([req.qi])
         del self._tiles[req.qi]
         self._streams[req.qi] = None      # the LRU cache keeps the stream
+        self._theta[req.qi] = 0.0
+        remap = self.plan.retire_tiles([req.qi])
+        if remap is not None:
+            # the plan compacted its query ring (bounded plan size for
+            # long-lived engines, DESIGN.md §8 item 9): shift every
+            # qi-indexed engine structure through the same remap
+            order = sorted(remap)        # old qis ascending == new order
+            self._streams = [self._streams[old] for old in order]
+            self._theta = [self._theta[old] for old in order]
+            self._tiles = {remap[old]: tiles
+                           for old, tiles in self._tiles.items()}
+            for r in self._inflight.values():
+                r.qi = remap[r.qi]
 
     # ------------------------------------------------------------- warmup
     def warmup(self, sample: Sequence[np.ndarray],

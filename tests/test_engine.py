@@ -209,3 +209,44 @@ def test_engine_warmup_resets_counters(small_world):
     resp = eng.serve(queries)
     assert all(r.stream_hit for r in resp)   # ... so serving hits it
     assert eng.summary()["requests"] == len(queries)
+
+
+def test_plan_query_ring_bounded(small_world):
+    """Long-lived engines: many admit/respond cycles keep the plan's
+    query list bounded (``ExecutionPlan.retire_tiles`` compaction ring,
+    DESIGN.md §8 item 9), qi-indexed engine state follows the remap,
+    and results stay bit-identical to the one-shot path throughout."""
+    coll, sim = small_world
+    params = _params()
+    clock, advance, sleep = _fake_clock()
+    eng = RequestEngine(coll, sim, params, partitions=2,
+                        clock=clock, sleep=sleep)
+    eng.plan.compact_min = 8             # trigger the ring at test scale
+    queries = sample_queries(coll, 6, seed=21)
+    one_shot = KoiosSearch(coll, sim, params, partitions=2)
+    ref = one_shot.search_batch(queries, schedule="sequential")
+
+    served, max_len = 0, 0
+    for cycle in range(12):
+        # overlapping submissions: half joins while the other half is
+        # mid-flight, so compaction interleaves with live requests
+        for q in queries[:3]:
+            eng.submit(q)
+        resp = list(eng.step())
+        for q in queries[3:]:
+            eng.submit(q)
+        while eng.pending():
+            advance(0.01)
+            resp.extend(eng.step())
+            max_len = max(max_len, len(eng.plan.queries))
+        for r in resp:
+            a = ref[r.rid % len(queries)]
+            assert np.array_equal(r.result.ids, a.ids)
+            assert np.array_equal(r.result.lb, a.lb)
+        served += len(resp)
+    assert served == 12 * len(queries)
+    # 72 requests served; without the ring the plan list would hold all
+    # of them — with it, the list stays near the live-request ceiling
+    assert max_len <= 2 * eng.plan.compact_min, max_len
+    assert len(eng.plan.queries) <= eng.plan.compact_min
+    assert eng.plan.tiles == []          # everything retired

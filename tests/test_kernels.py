@@ -221,3 +221,69 @@ def test_auction_batch_kernel_parity():
     assert np.array_equal(np.asarray(ref_res.ub), np.asarray(ker_res.ub))
     assert np.array_equal(np.asarray(ref_res.assign),
                           np.asarray(ker_res.assign))
+
+
+# ------------------------------------------------------------ refine_events
+def _refine_chunks(seed, n_events, num_sets=24, nq=16, slots_per_set=8,
+                   chunk=64):
+    from repro.core.token_stream import (EventStream,
+                                         pack_events_segmented, pad_events)
+
+    rng = np.random.default_rng(seed)
+    set_id = rng.integers(0, num_sets, n_events).astype(np.int32)
+    ev = EventStream(
+        set_id=set_id,
+        q_pos=rng.integers(0, nq, n_events).astype(np.int32),
+        # the domain invariant the layout rests on: each flat slot
+        # belongs to exactly one set
+        slot=(set_id * slots_per_set
+              + rng.integers(0, slots_per_set, n_events)).astype(np.int32),
+        sim=np.sort(rng.random(n_events).astype(np.float32))[::-1],
+        n_tuples=n_events)
+    return (pack_events_segmented(*pad_events(ev, chunk)),
+            num_sets, num_sets * slots_per_set)
+
+
+@pytest.mark.parametrize("seed,n_events", [(0, 120), (1, 500), (2, 37)])
+def test_refine_events_vs_ref(seed, n_events):
+    """The VMEM-resident admission kernel (interpret mode) is bit-equal
+    to the packed jnp oracle — the production segmented path — across a
+    multi-chunk carry chain."""
+    from repro.kernels import refine_events, refine_events_packed_ref
+
+    from repro.core.refinement import refine_carry_init
+
+    (s3, q3, sl3, si3, _snow), num_sets, total_slots = \
+        _refine_chunks(seed, n_events)
+    state = refine_carry_init(num_sets, 1, total_slots)[:-1]
+    for c in range(s3.shape[0]):
+        want = refine_events_packed_ref(
+            state, jnp.asarray(s3[c]), jnp.asarray(q3[c]),
+            jnp.asarray(sl3[c]), jnp.asarray(si3[c]))
+        got = refine_events(state, s3[c], q3[c], sl3[c], si3[c])
+        for a, b in zip(want, got):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        # thread the carry (alive stays all-true between chunks here)
+        state = want[:5] + (state[5],) + want[5:]
+    assert bool(np.asarray(state[4]).any())      # something was admitted
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 300))
+def test_refine_events_property(seed, n_events):
+    from repro.kernels import refine_events, refine_events_packed_ref
+
+    from repro.core.refinement import refine_carry_init
+
+    (s3, q3, sl3, si3, _snow), num_sets, total_slots = \
+        _refine_chunks(seed, n_events, num_sets=9, nq=40, chunk=128)
+    rng = np.random.default_rng(seed + 1)
+    alive = jnp.asarray(rng.random(num_sets) > 0.3)
+    st0 = refine_carry_init(num_sets, 2, total_slots)
+    state = st0[:5] + (alive,) + st0[6:-1]
+    want = refine_events_packed_ref(
+        state, jnp.asarray(s3[0]), jnp.asarray(q3[0]),
+        jnp.asarray(sl3[0]), jnp.asarray(si3[0]))
+    got = refine_events(state, s3[0], q3[0], sl3[0], si3[0])
+    for a, b in zip(want, got):
+        assert np.array_equal(np.asarray(a), np.asarray(b))

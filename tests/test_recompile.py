@@ -26,21 +26,35 @@ def _synthetic_events(rng, n_events: int, num_sets: int, nq: int,
 
 def test_refinement_variants_log_in_stream_length():
     """Stream lengths across 3 orders of magnitude compile O(log) scan
-    variants (pow2-padded chunk counts)."""
+    variants: pow2 chunk counts, plus the segmented layout's pow2
+    (W, L) lane grid — both lane dims are bounded by the (fixed) chunk
+    size, so the growth in STREAM LENGTH stays the chunk-count log and
+    the grid contributes a small additive factor.  A second sweep of
+    the same lengths must compile nothing (the bucketing is the point)."""
     rng = np.random.default_rng(0)
     num_sets, nq, total_slots, chunk = 50, 8, 400, 64
     sizes = rng.integers(2, 12, num_sets).astype(np.int64)
     sizes = np.minimum(sizes, total_slots // num_sets)
     before = _run_refinement._cache_size()
     lengths = [1, 3, 7, 20, 55, 130, 300, 701, 1500, 2500]
-    for L in lengths:
-        ev = _synthetic_events(rng, L, num_sets, nq, total_slots)
-        run_refinement(ev, sizes.astype(np.int32), nq, total_slots,
-                       k=5, alpha=0.8, chunk_size=chunk)
+
+    def sweep():
+        sweep_rng = np.random.default_rng(1)
+        for L in lengths:
+            ev = _synthetic_events(sweep_rng, L, num_sets, nq, total_slots)
+            run_refinement(ev, sizes.astype(np.int32), nq, total_slots,
+                           k=5, alpha=0.8, chunk_size=chunk)
+
+    sweep()
     variants = _run_refinement._cache_size() - before
     max_chunks = -(-max(lengths) // chunk)
-    bound = math.ceil(math.log2(max_chunks)) + 2   # pow2 chunk counts
+    # pow2 chunk counts + the pow2 lane grid at this (fixed) chunk size
+    bound = math.ceil(math.log2(max_chunks)) + 2 \
+        + math.ceil(math.log2(chunk))
     assert variants <= bound, (variants, bound)
+    mid = _run_refinement._cache_size()
+    sweep()                              # identical shapes: no growth
+    assert _run_refinement._cache_size() == mid
 
 
 def test_engine_sweep_compiles_olog(small_world):
@@ -69,8 +83,10 @@ def test_engine_sweep_compiles_olog(small_world):
     # 9 distinct |Q| values with streams spanning ~2 orders of magnitude.
     # Every padded dim is pow2, so variant counts are bounded by products
     # of log factors (nq_pad in {8,16,32} x c_pad in {8,16,32} at this
-    # scale), never by the number of distinct logical shapes seen.
-    assert grew[0] <= math.ceil(math.log2(1 + 2500 // 64)) + 2, grew
+    # scale, plus the segmented layout's pow2 lane grid at the fixed
+    # chunk size), never by the number of distinct logical shapes seen.
+    assert grew[0] <= math.ceil(math.log2(1 + 2500 // 64)) + 2 \
+        + 2 * math.ceil(math.log2(64)), grew
     assert grew[1] <= 3 * 3 + 1, grew          # (nq_pad x c_pad) grid
     assert grew[2] <= 3 * 3 + 1, grew
     # the actual recompile guard: a second identical sweep compiles NOTHING
