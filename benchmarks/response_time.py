@@ -34,6 +34,16 @@ results:
 
     PYTHONPATH=src python -m benchmarks.response_time --engine --partitions 4
 
+Sharded-collection A/B (``--shards N`` / ``--sharded``): builds the same
+logical repository as a 1-shard and an N-shard
+:class:`~repro.runtime.collection.ShardedCollection` (``--place`` pins
+shard i round-robin to ``jax.devices()[i]``), runs the fused schedule +
+device-side top-k merge tree over both, asserts bit-identical results
+(equal hash), and attributes per-shard wave dispatches / uploads /
+theta-carry hops from the sid-tagged instrument event stream:
+
+    PYTHONPATH=src python -m benchmarks.response_time --shards 4 --place
+
 Every A/B invocation also merges its record into
 ``BENCH_response_time.json`` under ``records[<mode>]`` (per-mode
 latencies + a hash of the results) so CI accumulates the perf
@@ -262,6 +272,96 @@ def run_fused_ab(dataset="opendata", partitions=4, batch_size=8, k=10,
     }
 
 
+def run_sharded_ab(dataset="opendata", shards=4, batch_size=8, k=10,
+                   alpha=0.8, verifier="hungarian", repeats=3,
+                   place=False):
+    """Sharded collection resource vs the 1-shard reference repository.
+
+    Builds the SAME logical repository twice as a
+    :class:`~repro.runtime.collection.ShardedCollection` — once at one
+    shard (the degenerate reference) and once at ``shards`` contiguous
+    set ranges, optionally placed round-robin over ``jax.devices()``
+    (``--place``).  Both arms run the fused wave schedule and the
+    device-side top-k merge tree; results are asserted bit-identical
+    (equal ``result_hash``), and per-shard wave dispatches / uploads /
+    theta-carry hops are attributed via the sid-tagged event stream of
+    ``repro.runtime.instrument``."""
+    import jax
+
+    from repro.core import KoiosSearch
+    from repro.runtime import instrument
+    from repro.runtime.collection import ShardedCollection
+
+    fused_mode = "auto" if jax.default_backend() == "tpu" else "interpret"
+    params = SearchParams(k=k, alpha=alpha, verifier=verifier,
+                          fused=fused_mode)
+    coll, sim = world(dataset)
+    devices = jax.devices() if place else None
+    reference = KoiosSearch(None, sim, params,
+                            collection=ShardedCollection.build(coll, 1))
+    sharded = KoiosSearch(
+        None, sim, params,
+        collection=ShardedCollection.build(coll, shards, devices=devices))
+    queries = sample_queries(coll, batch_size, seed=11)
+
+    def one_shard():
+        return reference.search_batch(queries, schedule="fused")
+
+    def n_shard():
+        return sharded.search_batch(queries, schedule="fused")
+
+    with instrument.counting() as c_cold:    # first borrow = the uploads
+        r_sh, _ = timed(n_shard)
+    r_ref, _ = timed(one_shard)
+    assert sharded.scheduler_stats.schedule == "fused", \
+        "fused schedule unavailable (provider or backend gate)"
+    for a, b in zip(r_ref, r_sh):
+        assert np.array_equal(a.ids, b.ids) and np.array_equal(a.lb, b.lb), \
+            "sharded collection diverged from the 1-shard reference"
+    ref_hash, sh_hash = result_hash(r_ref), result_hash(r_sh)
+    assert ref_hash == sh_hash, "result hash diverged across shard counts"
+
+    counts = {}
+    for name, fn in (("one_shard", one_shard), ("sharded", n_shard)):
+        with instrument.counting() as c:
+            fn()
+        counts[name] = instrument.totals(c)
+    with instrument.counting() as c_warm:    # steady-state sharded arm
+        n_shard()
+
+    def per_shard(counter):
+        """sid-tagged events grouped per shard: {'s0': {tag: n}, ...}."""
+        out = {}
+        for tag, n in sorted(counter.items()):
+            if "[s" not in tag:
+                continue
+            site, sid = tag.rsplit("[", 1)
+            out.setdefault(sid.rstrip("]"), {})[site] = n
+        return out
+
+    t_ref = min(timed(one_shard)[1] for _ in range(repeats))
+    t_sh = min(timed(n_shard)[1] for _ in range(repeats))
+    n = len(queries)
+    desc = sharded.collection.describe()
+    return {
+        "dataset": dataset, "shards": sharded.collection.num_shards,
+        "batch_size": n, "verifier": verifier,
+        "placed": sharded.collection.placed,
+        "devices": len(set(s["device"] for s in desc["shards"]
+                           if s["device"])),
+        "one_shard_s": t_ref / n, "sharded_s": t_sh / n,
+        "speedup": t_ref / t_sh if t_sh else float("inf"),
+        "one_shard_transfers": counts["one_shard"]["total"],
+        "sharded_transfers": counts["sharded"]["total"],
+        "upload_events": per_shard(c_cold),
+        "steady_state_events": per_shard(c_warm),
+        "shard_sets": [s["sets"] for s in desc["shards"]],
+        "device_bytes": desc["device_bytes"],
+        "result_hash": sh_hash,
+        "identical_topk": True,
+    }
+
+
 def run_engine_ab(dataset="opendata", partitions=4, batch_size=8,
                   n_requests=16, unique=8, stagger_ms=25.0, k=10,
                   alpha=0.8, verifier="hungarian", repeats=3):
@@ -363,7 +463,8 @@ def write_bench_json(record: dict, path: str, mode: str) -> None:
     One document keyed by mode: each A/B invocation merges its record
     under ``records[mode]`` instead of clobbering the file, so the
     trajectory of every mode (``batched_ab``/``partition_ab``/
-    ``fused_ab``/``engine_ab``/``suite``) stays comparable across PRs.
+    ``fused_ab``/``engine_ab``/``sharded_ab``/``suite``) stays
+    comparable across PRs.
     Legacy single-mode documents are migrated on first merge."""
     if not path:
         return
@@ -405,6 +506,11 @@ def main(argv=None):
                            "the per-batch serving loop under a staggered-"
                            "arrival trace (true per-request latencies, "
                            "stream-cache hit rate)")
+    mode.add_argument("--sharded", action="store_true",
+                      help="A/B the sharded collection resource vs the "
+                           "1-shard reference repository (bit-identical "
+                           "top-k, per-shard transfer attribution; "
+                           "implied by --shards)")
     ap.add_argument("--dataset", default=None,
                     help="restrict to one dataset (A/B default: opendata; "
                          "table mode default: all four)")
@@ -412,6 +518,13 @@ def main(argv=None):
                     help="A/B modes only")
     ap.add_argument("--partitions", type=int, default=4,
                     help="--overlap A/B only: repository partition count")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="shard count for the sharded-collection A/B "
+                         "(selects --sharded mode; default 4)")
+    ap.add_argument("--place", action="store_true",
+                    help="--sharded A/B only: pin shard i round-robin "
+                         "to jax.devices()[i] (theta carry hops "
+                         "device-to-device)")
     ap.add_argument("--n-requests", type=int, default=16,
                     help="--engine A/B only: trace length")
     ap.add_argument("--stagger-ms", type=float, default=25.0,
@@ -423,6 +536,31 @@ def main(argv=None):
     ap.add_argument("--json", default="BENCH_response_time.json",
                     help="perf-artifact path for A/B modes ('' disables)")
     args = ap.parse_args(argv)
+
+    if args.sharded or args.shards is not None:
+        r = run_sharded_ab(args.dataset or "opendata",
+                           args.shards or 4, args.batch_size,
+                           k=args.k, verifier=args.verifier,
+                           place=args.place)
+        print("dataset,arm,shards,devices,batch_size,"
+              "mean_latency_per_query_s,speedup_vs_one_shard,"
+              "transfers,result_hash,identical_topk")
+        for name, shards, lat, sp, tr in (
+                ("sharded", r["shards"], r["sharded_s"], r["speedup"],
+                 r["sharded_transfers"]),
+                ("one-shard", 1, r["one_shard_s"], 1.0,
+                 r["one_shard_transfers"])):
+            print(f"{r['dataset']},{name},{shards},{r['devices']},"
+                  f"{r['batch_size']},{lat:.4f},{sp:.2f},{tr},"
+                  f"{r['result_hash']},{r['identical_topk']}")
+        for sid in sorted(r["upload_events"]):
+            up = r["upload_events"][sid]
+            steady = r["steady_state_events"].get(sid, {})
+            print(f"  [{sid}] uploads={ {t.split(':', 1)[1]: n for t, n in up.items()} } "
+                  f"steady_waves={steady.get('h2d:wave_dispatch', 0)} "
+                  f"theta_hops={steady.get('h2d:theta_hop', 0)}")
+        write_bench_json(r, args.json, "sharded_ab")
+        return 0
 
     if args.engine:
         r = run_engine_ab(args.dataset or "opendata", args.partitions,

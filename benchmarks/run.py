@@ -85,8 +85,17 @@ def main(argv=None) -> None:
               f"{re_['batch_loop_s']:.4f},{re_['engine_s']:.4f},"
               f"{re_['speedup']:.2f},{re_['cache_hit_rate']:.2f},"
               f"{re_['mean_queue_depth']:.1f}")
+        _banner("Sharded collection: N-shard resource vs 1-shard reference")
+        print("dataset,shards,devices,one_shard_s,sharded_s,speedup,"
+              "result_hash")
+        rs = response_time.run_sharded_ab(
+            shards=4, batch_size=4 if args.fast else 8)
+        print(f"{rs['dataset']},{rs['shards']},{rs['devices']},"
+              f"{rs['one_shard_s']:.4f},{rs['sharded_s']:.4f},"
+              f"{rs['speedup']:.2f},{rs['result_hash']}")
         response_time.write_bench_json({
             "partition_ab": r, "fused_ab": rf, "engine_ab": re_,
+            "sharded_ab": rs,
         }, "BENCH_response_time.json", "suite")
         if not args.fast:
             _banner("SilkMoth-mode (char n-gram similarity, §VIII-B)")

@@ -16,7 +16,7 @@ from .scheduler import (ExecutionPlan, SchedulerStats, run_plan,
                         run_fused_wave, run_wave)
 from .search import (KoiosSearch, KoiosIndex, build_partition_indexes,
                      partition_ranges, search_partition,
-                     search_partition_batch, merge_topk)
+                     search_partition_batch, merge_topk, merge_topk_batch)
 from .baseline import baseline_topk, baseline_plus_topk, brute_force_topk
 
 __all__ = [
@@ -28,6 +28,6 @@ __all__ = [
     "run_wave",
     "KoiosSearch", "KoiosIndex", "build_partition_indexes",
     "partition_ranges", "search_partition", "search_partition_batch",
-    "merge_topk",
+    "merge_topk", "merge_topk_batch",
     "baseline_topk", "baseline_plus_topk", "brute_force_topk",
 ]

@@ -127,6 +127,10 @@ class ExecutionPlan:
                  pool_coll: SetCollection,
                  theta0: Optional[Sequence[float]] = None,
                  request_id_bases: Optional[Sequence[int]] = None):
+        # a ShardedCollection resource is a valid tile source: its shards
+        # ARE the plan's per-partition indexes (borrowed, never copied)
+        if hasattr(indexes, "shards"):
+            indexes = indexes.shards
         self.indexes = list(indexes)
         self.queries = [np.asarray(q, dtype=np.int32) for q in queries]
         self.pool_coll = pool_coll

@@ -172,6 +172,12 @@ def _masked_kth(x, mask, k: int):
 # leave, so the cap never affects results, only the device/host split.
 _WAVE_VB_CAP = 16
 
+# Warmup guard multipliers over the sample-observed pow2 chunk buckets:
+# each observed bucket is warmed (x1 — an lru hit after the cohort sweep)
+# together with the next bucket up (x2), so live streams one pow2 step
+# heavier than the warmup sample still hit a compiled program.
+_WAVE_CHUNK_GUARD = (1, 2)
+
 
 @functools.lru_cache(maxsize=None)
 def _wave_fn(cfg: WaveConfig, mesh):
@@ -322,17 +328,19 @@ def _wave_fn(cfg: WaveConfig, mesh):
 # Engine-lifetime runner reuse (DESIGN.md §3.2): keyed by provider/mesh
 # identity + the full (hashable, frozen) params.  Bounded in practice by
 # the handful of provider/params combinations a process serves; entries
-# pin their provider's normalized table on device, which is exactly the
-# point.
+# hold only the eps schedule and the compiled-program cache key — ALL
+# collection device state (CSR triplets, dense operands, the normalized
+# table) lives on the ShardedCollection's shards and is merely borrowed
+# at launch, so every runner/engine/replica over one collection shares
+# one copy of everything.
 _RUNNER_CACHE: dict = {}
 
 
 def wave_runner_for(sim_provider, params: SearchParams,
                     mesh=None) -> "WaveRunner":
     """The shared :class:`WaveRunner` of a (provider, params, mesh)
-    triple — cross-request reuse of the device-resident normalized table,
-    eps schedule, and (via the index-cached operands) every partition's
-    dense token matrix."""
+    triple — cross-request reuse of the eps schedule and compiled wave
+    programs; collection operands are borrowed per-shard at launch."""
     key = (id(sim_provider), params, id(mesh))
     hit = _RUNNER_CACHE.get(key)
     if hit is None:
@@ -367,6 +375,26 @@ class StreamOperands:
     n_tuples: int                    # T_pad (pow2)
     nq_pad: int
     q_words: int
+    _placed: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def on(self, device) -> "StreamOperands":
+        """This operand set committed to ``device`` (placed-shard waves;
+        one copy per device per plan, cached).  ``device=None`` is the
+        unplaced identity — the degenerate single-place case."""
+        if device is None:
+            return self
+        hit = self._placed.get(device)
+        if hit is None:
+            import jax
+
+            instrument.record(f"h2d:stream_upload[{device.id}]")
+            hit = self._placed[device] = dataclasses.replace(
+                self, tok=jax.device_put(self.tok, device),
+                q_pos=jax.device_put(self.q_pos, device),
+                sim=jax.device_put(self.sim, device),
+                qtok=jax.device_put(self.qtok, device),
+                nqs=jax.device_put(self.nqs, device), _placed={})
+        return hit
 
 
 @dataclasses.dataclass
@@ -394,52 +422,27 @@ class WaveOutputs:
 
 
 class WaveRunner:
-    """Fused-wave context: device-resident normalized table, per-partition
-    dense operands (cached on the index), theta chaining.
+    """Fused-wave context: eps schedule, compiled-program reuse, theta
+    chaining.  Collection device state is NOT owned here: every launch
+    *borrows* the shard's CSR triplet / dense operands / normalized
+    table through the :class:`~repro.runtime.collection.Shard` accessors
+    — the ShardedCollection resource is the single owner, so N engines,
+    replicas, and one-shot searches over one collection share one upload
+    of everything (DESIGN.md §5).
 
     The runner holds no per-plan state — every launch threads its carry
     explicitly — so ONE runner serves every plan/request that shares a
     (provider, params, mesh) triple; obtain it via
     :func:`wave_runner_for` (the request engine and the fused schedule
-    both do), and the normalized-table upload, eps schedule, and dense
-    partition operands are paid once per engine lifetime instead of once
-    per request."""
+    both do)."""
 
     def __init__(self, sim_provider, params: SearchParams,
                  mesh=None):
         self.params = params
         self.mesh = mesh
         self.interpret = jax.default_backend() != "tpu"
-        # normalizing the full table row-wise equals normalizing any row
-        # subset, so wave weights match the host pool's bit for bit; the
-        # table is normalized once and cached on the provider
-        from .similarity import normalized_table_for
-        self.table_n = normalized_table_for(sim_provider)
+        self.sim = sim_provider
         self.eps = make_eps_schedule(params.auction_eps)
-
-    # ------------------------------------------------------------ operands
-    def _partition_operands(self, index):
-        # Dense (num_sets, pow2(max set size)) token matrix, cached on
-        # the index for the engine's lifetime.  On a size-skewed
-        # partition one outlier set inflates c_pad for every row —
-        # token-balanced partitioning (partition_ranges(by="tokens"))
-        # keeps partitions uniform, and a CSR-gathering wave for extreme
-        # skew is future work; at repository-partition scales the dense
-        # form is what keeps every round's weight gather one slice.
-        ops = getattr(index, "_wave_operands", None)
-        if ops is None:
-            coll = index.coll
-            sizes = coll.set_sizes
-            c_pad = _pow2(int(sizes.max()) if len(sizes) else 1)
-            dense = np.full((coll.num_sets, c_pad), -1, np.int32)
-            if coll.total_tokens:
-                rows = np.repeat(np.arange(coll.num_sets), sizes)
-                cols = np.arange(coll.total_tokens) \
-                    - np.repeat(coll.set_indptr[:-1], sizes)
-                dense[rows, cols] = coll.set_tokens
-            ops = (jnp.asarray(dense), jnp.asarray(sizes, jnp.int32), c_pad)
-            index._wave_operands = ops
-        return ops
 
     def init_theta(self, theta0: np.ndarray, B_pad: int):
         t = np.zeros(B_pad, np.float32)
@@ -477,6 +480,42 @@ class WaveRunner:
             nqs=jnp.asarray(nqs), n_tuples=t_pad, nq_pad=nq_pad,
             q_words=_pow2(max(1, -(-nq_max // 32))))
 
+    # -------------------------------------------------------------- warmup
+    def warm(self, index, B_pad: int, n_chunks: int, n_tuples: int,
+             nq_pad: int, q_words: int) -> None:
+        """Compile one shard-local wave config by running it on an empty
+        (all-pad) cohort — the engine warmup's shard grid sweep
+        (DESIGN.md §3.2): steady-state traffic whose pow2 buckets were
+        warmed here reuses the compiled program, so sharded serving
+        keeps the zero-recompile invariant.  Empty streams expand to
+        zero events, so the run itself is cheap and touches no result
+        state; already-compiled configs are lru-cache hits."""
+        set_tok, sizes32, c_pad = index.wave_operands()
+        indptr_dev, pset_dev, pslot_dev = index.csr_arrays()
+        table_n = index.table_for(self.sim)
+        put = getattr(index, "_put", jnp.asarray)
+        cfg = WaveConfig(
+            num_sets=index.coll.num_sets,
+            total_slots=index.coll.total_tokens, q_words=q_words,
+            k=self.params.k, n_chunks=n_chunks,
+            chunk=self.params.chunk_size, n_tuples=n_tuples,
+            nq_pad=nq_pad, c_pad=c_pad, B=B_pad,
+            verify_batch=min(self.params.verify_batch, _WAVE_VB_CAP),
+            rounds=self.params.wave_rounds, ub_mode=self.params.ub_mode,
+            verifier=self.params.verifier,
+            refine_layout=self.params.refine_layout,
+            alpha=float(self.params.alpha),
+            interpret=self.interpret, use_kernel=not self.interpret)
+        _wave_fn(cfg, self.mesh)(
+            put(np.full((B_pad, n_tuples), -1, np.int32)),
+            put(np.zeros((B_pad, n_tuples), np.int32)),
+            put(np.zeros((B_pad, n_tuples), np.float32)),
+            put(np.full((B_pad, nq_pad), -1, np.int32)),
+            put(np.zeros(B_pad, np.int32)),
+            put(np.zeros(B_pad, np.float32)),
+            table_n, set_tok, sizes32, self.eps,
+            indptr_dev, pset_dev, pslot_dev)
+
     # -------------------------------------------------------------- launch
     def launch_wave(self, index, queries: Sequence[np.ndarray], streams,
                     theta_dev,
@@ -490,14 +529,34 @@ class WaveRunner:
         counting each tile's events from the host CSR counts (to size
         the pow2 chunk grid); expansion itself runs in-trace from
         ``stream_ops`` (built here when the caller didn't share one
-        across waves) and the index's device-resident CSR arrays."""
-        set_tok, sizes32, c_pad = self._partition_operands(index)
-        indptr_dev, pset_dev, pslot_dev = index.inv.device_arrays()
+        across waves) and the shard's borrowed CSR arrays.
+
+        ``index`` is a :class:`~repro.runtime.collection.Shard`: its
+        CSR triplet, dense operands, and normalized table are borrowed
+        views owned by the ShardedCollection.  When the shard is PLACED
+        the wave runs on its device: the shared stream operands get a
+        per-device committed copy and the theta carry hops to the
+        shard's device — that hop IS the cross-shard bound exchange of
+        the carry-chained drive (an on-device all-reduce via the mesh is
+        the alternative exchange mode; placed shards use the carry
+        chain).  Unplaced shards take the identical code path with
+        every placement a no-op — the degenerate single-device case."""
+        set_tok, sizes32, c_pad = index.wave_operands()
+        indptr_dev, pset_dev, pslot_dev = index.csr_arrays()
+        table_n = index.table_for(self.sim)
         coll = index.coll
         B_pad = theta_dev.shape[0]
         chunk = self.params.chunk_size
         if stream_ops is None:
             stream_ops = self.stream_operands(queries, streams, B_pad)
+        device = getattr(index, "device", None)
+        if device is not None:
+            stream_ops = stream_ops.on(device)
+            if theta_dev.devices() != {device}:
+                # the theta_lb carry hops shard-to-shard: the bound
+                # raised on any earlier shard re-prunes this one
+                instrument.record(f"h2d:theta_hop[s{index.sid}]")
+            theta_dev = jax.device_put(theta_dev, device)
 
         counts = index.inv.posting_counts()
         metas: List[_TileMeta] = []
@@ -524,10 +583,10 @@ class WaveRunner:
             alpha=float(self.params.alpha),
             interpret=self.interpret, use_kernel=not self.interpret)
         fn = _wave_fn(cfg, self.mesh)
-        instrument.record("h2d:wave_dispatch")
+        instrument.record(f"h2d:wave_dispatch[s{getattr(index, 'sid', 0)}]")
         out = fn(stream_ops.tok, stream_ops.q_pos, stream_ops.sim,
                  stream_ops.qtok, stream_ops.nqs, theta_dev,
-                 self.table_n, set_tok, sizes32, self.eps,
+                 table_n, set_tok, sizes32, self.eps,
                  indptr_dev, pset_dev, pslot_dev)
         return WaveLaunch(out=out, tile_meta=metas, cfg=cfg), out[-1]
 

@@ -51,22 +51,40 @@ class SearchServer:
     latency, queue time, wave count, and stream-cache attribution.
     ``batched=False`` falls back to the per-query one-shot loop
     (identical results — the A/B baseline of
-    ``benchmarks/response_time.py``)."""
+    ``benchmarks/response_time.py``).
+
+    The repository lives in ONE :class:`ShardedCollection` resource
+    (built here, optionally placed across ``shards`` devices) shared by
+    the one-shot baseline and every engine replica — one front door over
+    one logical collection (DESIGN.md §5).  ``replicas > 1`` serves
+    through an :class:`~repro.runtime.engine.AdmissionRouter` fleet."""
 
     def __init__(self, coll, sim, params: SearchParams, partitions: int,
                  schedule: str = "overlap", bound_exchange=None, mesh=None,
-                 stream_cache_capacity: int = 512):
-        self.one_shot = KoiosSearch(coll, sim, params,
-                                    partitions=partitions,
+                 stream_cache_capacity: int = 512, replicas: int = 1,
+                 shards: int = 0, place: bool = False):
+        from ..runtime.collection import ShardedCollection
+        from ..runtime.engine import AdmissionRouter
+
+        self.collection = ShardedCollection.build(
+            coll, shards or partitions,
+            devices="auto" if place else None)
+        self.one_shot = KoiosSearch(None, sim, params,
                                     schedule=schedule,
                                     bound_exchange=bound_exchange,
-                                    mesh=mesh)
-        self.engine = RequestEngine(
-            coll, sim, params,
+                                    mesh=mesh, collection=self.collection)
+        engine_kwargs = dict(
             schedule="fused" if schedule == "fused" else "wave",
             bound_exchange=bound_exchange, mesh=mesh,
-            stream_cache_capacity=stream_cache_capacity,
-            indexes=self.one_shot.partitions)     # one index build, shared
+            stream_cache_capacity=stream_cache_capacity)
+        if replicas > 1:
+            self.engine = AdmissionRouter(
+                None, sim, params, replicas=replicas,
+                collection=self.collection, **engine_kwargs)
+        else:
+            self.engine = RequestEngine(
+                None, sim, params, collection=self.collection,
+                **engine_kwargs)
 
     def serve_batch(self, queries, batched: bool = True, deadlines=None):
         """One request batch -> list of response dicts (request order)."""
@@ -95,6 +113,19 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--alpha", type=float, default=0.8)
     ap.add_argument("--partitions", type=int, default=2)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shard count of the collection resource "
+                         "(defaults to --partitions; the shards ARE the "
+                         "scheduler's partitions)")
+    ap.add_argument("--place", action="store_true",
+                    help="pin shard i's device arrays to device i "
+                         "(round-robin over jax.devices()); waves run "
+                         "where their shard lives and the theta_lb "
+                         "carry hops between shard devices")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas over the ONE shared collection "
+                         "resource, behind the admission router "
+                         "(load-routed, globally ordered responses)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--batch-size", type=int, default=2)
     ap.add_argument("--stagger-ms", type=float, default=0.0,
@@ -138,10 +169,15 @@ def main(argv=None):
                 else "fused" if args.fused else "overlap")
     server = SearchServer(coll, sim, params, args.partitions,
                           schedule=schedule,
-                          bound_exchange=bound_exchange, mesh=mesh)
+                          bound_exchange=bound_exchange, mesh=mesh,
+                          replicas=args.replicas, shards=args.shards,
+                          place=args.place)
+    desc = server.collection.describe()
+    placed = [s["device"] for s in desc["shards"] if s["device"]]
     print(f"[serve] corpus: {coll.num_sets} sets, vocab {coll.vocab_size}, "
-          f"{args.partitions} partitions, "
-          f"engine schedule={server.engine.schedule}")
+          f"{server.collection.num_shards} shards"
+          + (f" on {len(set(placed))} devices" if placed else "")
+          + (f", {args.replicas} replicas" if args.replicas > 1 else ""))
 
     queries = sample_queries(coll, args.requests, seed=1)
     for lo in range(0, len(queries), args.batch_size):
@@ -167,16 +203,23 @@ def main(argv=None):
                   f"verified={r['stats']['exact_matches']}")
     if not args.per_query:
         s = server.engine.summary()
-        cache = s["stream_cache"]
-        print(f"  [engine] schedule={s['schedule']} "
-              f"requests={s['requests']} steps={s['steps']} "
-              f"mean_lat={s['mean_latency_s']:.4f}s "
-              f"p95={s['p95_latency_s']:.4f}s "
-              f"mean_queue_depth={s['mean_queue_depth']:.1f} "
-              f"waves={s['scheduler']['waves']} "
-              f"cache_hit_rate={cache['hit_rate']:.2f} "
-              f"(hits={cache['hits']} misses={cache['misses']} "
-              f"evictions={cache['evictions']})")
+        replicas = s.get("per_replica", [s])
+        if "per_replica" in s:
+            print(f"  [router] replicas={s['replicas']} "
+                  f"requests={s['requests']} waves={s['waves']} "
+                  f"device_bytes={s['collection']['device_bytes']}")
+        for ri, p in enumerate(replicas):
+            cache = p["stream_cache"]
+            tag = f"replica {ri}" if "per_replica" in s else "engine"
+            print(f"  [{tag}] schedule={p['schedule']} "
+                  f"requests={p['requests']} steps={p['steps']} "
+                  f"mean_lat={p['mean_latency_s']:.4f}s "
+                  f"p95={p['p95_latency_s']:.4f}s "
+                  f"mean_queue_depth={p['mean_queue_depth']:.1f} "
+                  f"waves={p['scheduler']['waves']} "
+                  f"cache_hit_rate={cache['hit_rate']:.2f} "
+                  f"(hits={cache['hits']} misses={cache['misses']} "
+                  f"evictions={cache['evictions']})")
     return 0
 
 

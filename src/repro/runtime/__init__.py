@@ -6,14 +6,18 @@ from .fault import (FleetMonitor, FaultConfig, plan_elastic_mesh,
 __all__ = ["param_pspecs", "opt_state_pspecs", "input_pspecs",
            "to_shardings", "fsdp_axes", "dp_axes", "FleetMonitor",
            "FaultConfig", "plan_elastic_mesh", "resume_plan",
-           "RequestEngine", "EngineResponse"]
+           "RequestEngine", "EngineResponse", "AdmissionRouter",
+           "ShardedCollection", "Shard"]
 
 
 def __getattr__(name):
-    # engine imports repro.core, which itself imports
-    # repro.runtime.instrument — resolve the request-engine names lazily
-    # so `import repro.core` never re-enters a half-initialized package
-    if name in ("RequestEngine", "EngineResponse"):
+    # engine/collection import repro.core, which itself imports
+    # repro.runtime.instrument — resolve these names lazily so
+    # `import repro.core` never re-enters a half-initialized package
+    if name in ("RequestEngine", "EngineResponse", "AdmissionRouter"):
         from . import engine
         return getattr(engine, name)
+    if name in ("ShardedCollection", "Shard"):
+        from . import collection
+        return getattr(collection, name)
     raise AttributeError(name)

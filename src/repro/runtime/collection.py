@@ -1,0 +1,256 @@
+"""Sharded collection resource: ONE logical repository, pod-scale placement.
+
+Every serving layer built before this module sharded *queries*; the
+collection itself (CSR inverted index triplet, embedding table, set-norm
+metadata) lived whole on one device inside each ``KoiosSearch``.  This
+module makes the collection a first-class **resource object**:
+
+:class:`ShardedCollection`
+    Owns the repository split — contiguous set ranges over a shard axis
+    (paper §VI; LES3 makes the same partition-level-index argument for
+    exact set search at corpus scale) — and ALL of its device state.
+    Built once, shared by every consumer: ``KoiosSearch`` instances, the
+    request engine, engine replicas behind the admission router, and
+    benchmarks all borrow the same per-shard operand views, so the CSR
+    triplet / dense token matrix / normalized embedding table of a shard
+    is uploaded exactly once per process, not once per consumer.
+
+:class:`Shard`
+    One contiguous set range: the partition-local :class:`SetCollection`,
+    its inverted index, the global id offset, and an optional *placement
+    device*.  The search/scheduler/wave layers receive Shards wherever
+    they historically received ``KoiosIndex``es (``Shard`` IS a
+    ``KoiosIndex`` — same host fields, so the host pipeline is oblivious)
+    and **borrow** device operands through the accessors below instead of
+    owning uploads:
+
+      ``csr_arrays()``    int32 CSR triplet for in-trace event expansion
+      ``wave_operands()`` dense (num_sets, c_pad) token matrix + sizes
+      ``table_for(sim)``  the provider's row-normalized embedding table,
+                          resident on the shard's device
+
+Placement: ``ShardedCollection.build(..., devices=...)`` pins shard *i*'s
+arrays to device *i* (``jax.device_put``); each shard's fused wave then
+runs where its data lives, and the theta_lb carry hops device-to-device
+between waves (the shared-bound exchange of DESIGN.md §5 — the same
+``all_reduce_max`` contract, realised as carry chaining when waves are
+driven from one host).  ``devices=None`` leaves every array uncommitted
+on the default device — the single-device case is the degenerate 1-place
+instance of the same code path, not a fork.
+
+Exactness is placement- and shard-count-invariant: shard boundaries only
+change which tile a set's events land in, every per-set numeric is
+computed from shard-local operands identical to the unsharded slices, and
+the shared theta_lb bound is only ever raised (monotone, certified) — so
+sharded top-k is bit-identical to the 1-shard reference
+(tests/test_sharded_collection.py asserts this across shard counts x
+schedules x verifiers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.inverted_index import InvertedIndex
+from ..core.search import KoiosIndex, partition_ranges
+from ..core.types import SetCollection, assert_int32, pow2
+from . import instrument
+
+
+@dataclasses.dataclass
+class Shard(KoiosIndex):
+    """One contiguous set range of the repository + its device residency.
+
+    Host fields are exactly ``KoiosIndex`` (coll, inv, id_offset), so the
+    scheduler's tiles and the host pipeline consume Shards unchanged.
+    Device state is built lazily on first borrow and cached on the shard
+    — the ShardedCollection (not any search object) is its owner, and its
+    lifetime is the resource's lifetime.
+    """
+
+    sid: int = 0                     # shard index within the collection
+    device: Optional[Any] = None     # placement; None = default device
+
+    def _put(self, x):
+        """Upload ``x`` honoring the shard's placement."""
+        import jax
+        import jax.numpy as jnp
+
+        if self.device is None:
+            return jnp.asarray(x)
+        return jax.device_put(x, self.device)
+
+    # ------------------------------------------------------------ borrows
+    def csr_arrays(self):
+        """Device-resident int32 CSR triplet (indptr, posting_set,
+        posting_slot) for the fused wave's in-trace event expansion
+        (DESIGN.md §3.3) — uploaded once per shard lifetime.
+
+        Unplaced shards delegate to ``InvertedIndex.device_arrays`` —
+        ONE cache (and one ``h2d:index_upload`` record) shared with any
+        direct index consumer; placed shards pin a committed copy."""
+        if self.device is None:
+            return self.inv.device_arrays()
+        cached = self.__dict__.get("_csr")
+        if cached is None:
+            assert_int32(self.inv.total_postings, "total_postings")
+            instrument.record(f"h2d:index_upload[s{self.sid}]")
+            pad = np.zeros(1, np.int32)
+            cached = tuple(self._put(a) for a in (
+                self.inv.tok_indptr.astype(np.int32),
+                np.concatenate(
+                    [self.inv.posting_set.astype(np.int32), pad - 1]),
+                np.concatenate(
+                    [self.inv.posting_slot.astype(np.int32), pad])))
+            self._csr = cached
+        return cached
+
+    def wave_operands(self):
+        """Dense (num_sets, pow2(max set size)) token matrix + int32 set
+        sizes + the pow2 column pad — the fused wave's verification
+        operands, built and uploaded once per shard lifetime.
+
+        On a size-skewed shard one outlier set inflates ``c_pad`` for
+        every row — token-balanced sharding (``by='tokens'``) keeps
+        shards uniform; at repository-shard scales the dense form is what
+        keeps every round's weight gather one slice."""
+        cached = self.__dict__.get("_wave_ops")
+        if cached is None:
+            coll = self.coll
+            sizes = coll.set_sizes
+            c_pad = pow2(int(sizes.max()) if len(sizes) else 1)
+            dense = np.full((coll.num_sets, c_pad), -1, np.int32)
+            if coll.total_tokens:
+                rows = np.repeat(np.arange(coll.num_sets), sizes)
+                cols = np.arange(coll.total_tokens) \
+                    - np.repeat(coll.set_indptr[:-1], sizes)
+                dense[rows, cols] = coll.set_tokens
+            if self.device is not None:
+                instrument.record(f"h2d:operand_upload[s{self.sid}]")
+            cached = (self._put(dense), self._put(sizes.astype(np.int32)),
+                      c_pad)
+            self._wave_ops = cached
+        return cached
+
+    def table_for(self, sim_provider):
+        """The provider's row-L2-normalized embedding table, resident on
+        this shard's device.  Unplaced shards share the provider's own
+        cached device table (one upload per provider, process-wide);
+        placed shards keep one pinned copy per (provider, device)."""
+        from ..core.similarity import normalized_table_for
+
+        table = normalized_table_for(sim_provider)
+        if self.device is None:
+            return table
+        cache = self.__dict__.setdefault("_tables", {})
+        hit = cache.get(id(sim_provider))
+        if hit is None:
+            import jax
+
+            instrument.record(f"h2d:table_upload[s{self.sid}]")
+            # pin the provider so its id cannot be recycled while cached
+            hit = cache[id(sim_provider)] = (
+                jax.device_put(table, self.device), sim_provider)
+        return hit[0]
+
+
+class ShardedCollection:
+    """The repository as a shared resource: shards + their device state.
+
+    Consumers (``KoiosSearch``, ``RequestEngine``, engine replicas behind
+    the :class:`~repro.runtime.engine.AdmissionRouter`) hold a reference
+    and borrow operand views; none of them owns uploads.  Building the
+    resource is host-only — device arrays materialize on first borrow.
+    """
+
+    def __init__(self, coll: SetCollection, shards: Sequence[Shard]):
+        self.coll = coll
+        self.shards: List[Shard] = list(shards)
+
+    # ---------------------------------------------------------- factories
+    @staticmethod
+    def build(coll: SetCollection, shards: int = 1, by: str = "sets",
+              devices=None) -> "ShardedCollection":
+        """Split ``coll`` into ``shards`` contiguous set ranges
+        (``by='sets'`` equal counts / ``by='tokens'`` greedy token
+        balance — :func:`repro.core.search.partition_ranges`) and wrap
+        each in a :class:`Shard`.
+
+        ``devices``: ``None`` keeps every shard on the default device
+        (the degenerate single-place case); ``'auto'`` spreads shards
+        round-robin over ``jax.devices()``; an explicit device sequence
+        pins shard *i* to ``devices[i % len(devices)]``.  Empty ranges
+        (``shards > num_sets``) are dropped, so every shard is
+        non-empty."""
+        if devices == "auto":
+            import jax
+
+            devices = jax.devices()
+        bounds = partition_ranges(coll.set_sizes, shards, by=by)
+        out: List[Shard] = []
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            if hi <= lo:
+                continue
+            sid = len(out)
+            dev = devices[sid % len(devices)] if devices else None
+            out.append(Shard(
+                coll=coll.slice_sets(int(lo), int(hi)),
+                inv=None, id_offset=int(lo), sid=sid, device=dev))
+        for s in out:
+            s.inv = InvertedIndex.build(s.coll)
+        return ShardedCollection(coll, out)
+
+    @staticmethod
+    def adopt(coll: SetCollection,
+              indexes: Sequence[KoiosIndex]) -> "ShardedCollection":
+        """Wrap prebuilt partition indexes (or existing Shards) as a
+        collection resource — the compatibility entry for callers that
+        built ``KoiosIndex``es directly.  Existing Shards keep their
+        cached device state (and sid/placement)."""
+        shards = [ix if isinstance(ix, Shard)
+                  else Shard(coll=ix.coll, inv=ix.inv,
+                             id_offset=ix.id_offset, sid=sid)
+                  for sid, ix in enumerate(indexes)]
+        return ShardedCollection(coll, shards)
+
+    # ----------------------------------------------------------- geometry
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def placed(self) -> bool:
+        """Whether any shard is pinned to an explicit device."""
+        return any(s.device is not None for s in self.shards)
+
+    def shard_ranges(self) -> List[tuple]:
+        """[(lo, hi)) global set-id range per shard."""
+        return [(s.id_offset, s.id_offset + s.coll.num_sets)
+                for s in self.shards]
+
+    def device_bytes(self) -> int:
+        """Host-side estimate of the per-shard device footprint already
+        materialized (CSR triplets + dense operand matrices)."""
+        total = 0
+        for s in self.shards:
+            if s.__dict__.get("_csr") is not None:
+                total += (4 * (s.inv.vocab_size + 1)
+                          + 2 * 4 * (s.inv.total_postings + 1))
+            ops = s.__dict__.get("_wave_ops")
+            if ops is not None:
+                total += 4 * s.coll.num_sets * (ops[2] + 1)
+        return total
+
+    def describe(self) -> dict:
+        """Placement/footprint summary (serving observability)."""
+        return {
+            "num_sets": self.coll.num_sets,
+            "shards": [
+                {"sid": s.sid, "sets": s.coll.num_sets,
+                 "tokens": s.coll.total_tokens,
+                 "device": str(s.device) if s.device is not None else None}
+                for s in self.shards],
+            "device_bytes": self.device_bytes(),
+        }

@@ -51,7 +51,7 @@ import numpy as np
 from ..core.postprocess import VerifierPool
 from ..core.scheduler import (ExecutionPlan, SchedulerStats, _exchange,
                               run_fused_wave, run_wave)
-from ..core.search import (KoiosIndex, build_partition_indexes, merge_topk)
+from ..core.search import KoiosIndex, merge_topk
 from ..core.token_stream import (TokenStreamCache,
                                  build_token_stream_batch_cached)
 from ..core.types import SearchParams, SearchResult
@@ -104,6 +104,14 @@ class RequestEngine:
 
     ``clock``/``sleep`` are injectable for deterministic trace-replay
     tests; real serving uses the monotonic wall clock.
+
+    Collection state lives in a :class:`ShardedCollection` resource —
+    pass ``collection=`` to serve an existing (possibly placed, possibly
+    shared-with-other-replicas) resource, or let the constructor build a
+    private one from ``coll``/``partitions``/``partition_by``
+    (``indexes=`` adopts prebuilt partition indexes into a resource —
+    benchmarks sharing one index build).  The engine borrows per-shard
+    operand views; it owns no collection device arrays.
     """
 
     def __init__(self, coll, sim_provider,
@@ -115,21 +123,25 @@ class RequestEngine:
                  max_wave_requests: int = 64,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
-                 indexes: Optional[Sequence[KoiosIndex]] = None):
+                 indexes: Optional[Sequence[KoiosIndex]] = None,
+                 collection=None):
+        from .collection import ShardedCollection
+
         self.params = params or SearchParams()
         self.sim = sim_provider
-        self.coll = coll
+        if collection is None:
+            collection = (ShardedCollection.adopt(coll, indexes)
+                          if indexes is not None else
+                          ShardedCollection.build(coll, partitions,
+                                                  by=partition_by))
+        self.collection = collection
+        self.coll = collection.coll
         self.bound_exchange = bound_exchange
         self.mesh = mesh
         self.clock = clock
         self._sleep = sleep
         self.max_wave_requests = int(max_wave_requests)
-
-        if indexes is not None:        # prebuilt partitions (benchmarks
-            self.partitions = list(indexes)     # share one index build)
-        else:
-            self.partitions = build_partition_indexes(coll, partitions,
-                                                      by=partition_by)
+        self.partitions = collection.shards
 
         if schedule in ("overlap", "sequential"):
             schedule = "wave"
@@ -145,8 +157,8 @@ class RequestEngine:
         self.schedule = schedule
 
         # engine-lifetime shared machinery (the cross-request reuse)
-        self.plan = ExecutionPlan(self.partitions, [], pool_coll=coll)
-        self.pool = VerifierPool(coll, sim_provider, self.params)
+        self.plan = ExecutionPlan(self.partitions, [], pool_coll=self.coll)
+        self.pool = VerifierPool(self.coll, sim_provider, self.params)
         self.stream_cache = TokenStreamCache(stream_cache_capacity)
         self.counters = EngineCounters()
 
@@ -312,12 +324,16 @@ class RequestEngine:
 
         Serves pow2-sized cohorts of ``sample`` (stream sweep,
         refinement scan, solver, and wave shapes for every batch bucket
-        the trace can coalesce) and sweeps the fused-verification
-        pairwise pow2 grid, so steady-state serving triggers zero
-        recompiles (tests/test_recompile.py).  Standard request-engine
-        startup practice; ``reset_counters`` wipes the warmup's traces
-        from the metrics (the stream cache keeps its entries — that is
-        warmup working as intended)."""
+        the trace can coalesce), sweeps the SHARD-LOCAL fused wave-config
+        grid (every shard x cohort bucket x the sample's pow2 event-chunk
+        buckets plus a 2x guard bucket — steady-state queries landing one
+        bucket above the sample still hit a compiled program), and sweeps
+        the fused-verification pairwise pow2 grid, so steady-state
+        serving — sharded or not — triggers zero recompiles
+        (tests/test_recompile.py).  Standard request-engine startup
+        practice; ``reset_counters`` wipes the warmup's traces from the
+        metrics (the stream cache keeps its entries — that is warmup
+        working as intended)."""
         sample = [np.asarray(q, np.int32) for q in sample]
         if sample:
             bs = 1
@@ -326,6 +342,7 @@ class RequestEngine:
                 if bs >= len(sample):
                     break
                 bs = min(2 * bs, len(sample))
+            self._warmup_wave_grid(sample)
         # verification weight dispatch: the fused pairwise shape is
         # (pow2 rows, pow2 cols) — sweep the grid the pool can emit
         from ..core.postprocess import _pad_pow2
@@ -347,6 +364,49 @@ class RequestEngine:
             # scheduler-side counters (waves/rounds/...) are warmup work
             # too — reset them so summary() reflects only real traffic
             self.plan.stats = SchedulerStats(tiles=len(self.plan.tiles))
+
+    def _warmup_wave_grid(self, sample: Sequence[np.ndarray]) -> None:
+        """Sweep the shard-local fused wave-config grid (DESIGN.md §3.2).
+
+        The serve() cohort sweep above compiles exactly the (shard,
+        cohort-bucket, event-chunk-bucket) configs the SAMPLE's streams
+        produce; live traffic with slightly heavier streams lands one
+        pow2 chunk bucket up and would recompile mid-serve.  This pass
+        walks the same doubling cohorts and, per shard, compiles the
+        observed chunk bucket (an lru hit — free) plus its 2x guard
+        bucket on an empty cohort (``WaveRunner.warm``), so every shard's
+        near-neighborhood of the sample grid is compiled before traffic.
+        Host-wave engines have no wave programs — nothing to do."""
+        if self._runner is None:
+            return
+        from ..core.types import pow2
+        from ..core.wave import _WAVE_CHUNK_GUARD
+        streams = build_token_stream_batch_cached(
+            sample, self.sim, self.params.alpha, self.stream_cache,
+            use_kernel=self.params.stream_use_kernel)
+        chunk = self.params.chunk_size
+        counts = [s.inv.posting_counts() for s in self.partitions]
+        bs = 1
+        while True:
+            cohort_q, cohort_s = sample[:bs], streams[:bs]
+            B_pad = pow2(len(cohort_q))
+            t_pad = pow2(max([len(s) for s in cohort_s] or [1]) or 1)
+            nq_max = max(len(q) for q in cohort_q)
+            nq_pad = pow2(max(nq_max, 1))
+            q_words = pow2(max(1, -(-nq_max // 32)))
+            for shard, cnt in zip(self.partitions, counts):
+                buckets = set()
+                for s in cohort_s:
+                    n_events = int(cnt[s.token].sum())
+                    if n_events:
+                        buckets.add(pow2(max(1, -(-n_events // chunk))))
+                for nc in sorted(b * g for b in buckets
+                                 for g in _WAVE_CHUNK_GUARD):
+                    self._runner.warm(shard, B_pad, nc, t_pad,
+                                      nq_pad, q_words)
+            if bs >= len(sample):
+                break
+            bs = min(2 * bs, len(sample))
 
     # -------------------------------------------------------------- drive
     def pending(self) -> int:
@@ -385,3 +445,124 @@ class RequestEngine:
             "fused_requests": self.plan.stats.fused_requests,
         }
         return out
+
+
+class AdmissionRouter:
+    """N :class:`RequestEngine` replicas over ONE logical collection
+    behind a single front door (DESIGN.md §5).
+
+    Every replica serves the SAME :class:`ShardedCollection` resource —
+    per-shard device operands are uploaded once and borrowed by all, and
+    identical (provider, params, mesh) triples share compiled wave
+    programs through ``wave_runner_for`` — so a replica costs one plan +
+    one verifier pool + one stream cache, not another copy of the
+    repository.  The router admits requests with a global request id,
+    routes each to the least-loaded replica (fewest lifecycle-pending
+    requests; round-robin among ties, so an idle fleet still spreads
+    arrivals), and merges responses back into global-rid order.  Replica
+    count scales the host-side serving loop (admission, stream sweeps,
+    postprocess continuation) over one repository; exactness is per
+    replica — every response is bit-identical to a one-shot
+    ``KoiosSearch.search_batch`` over the same collection, so routing
+    cannot perturb any result (tests/test_sharded_collection.py)."""
+
+    def __init__(self, coll, sim_provider,
+                 params: Optional[SearchParams] = None, replicas: int = 2,
+                 partitions: int = 1, partition_by: str = "sets",
+                 collection=None, **engine_kwargs):
+        from .collection import ShardedCollection
+
+        assert replicas >= 1, replicas
+        if collection is None:
+            collection = ShardedCollection.build(coll, partitions,
+                                                 by=partition_by)
+        self.collection = collection
+        self.engines = [
+            RequestEngine(None, sim_provider, params,
+                          collection=collection, **engine_kwargs)
+            for _ in range(replicas)]
+        self.clock = self.engines[0].clock       # shared trace clock
+        self._rid = itertools.count()
+        self._local: Dict[int, "tuple[int, int]"] = {}  # gid -> (eng, rid)
+        self._gid: Dict["tuple[int, int]", int] = {}    # inverse
+        self._rr = itertools.count()                    # tie-break cursor
+
+    # ------------------------------------------------------------- routing
+    def route(self) -> int:
+        """Replica index for the next admit: least pending, round-robin
+        among ties (deterministic under the injectable clocks)."""
+        loads = [e.pending() for e in self.engines]
+        lo = min(loads)
+        ties = [i for i, n in enumerate(loads) if n == lo]
+        return ties[next(self._rr) % len(ties)]
+
+    def submit(self, query, deadline: Optional[float] = None,
+               arrival: Optional[float] = None) -> int:
+        """Admit one request to the fleet; returns its GLOBAL rid."""
+        ei = self.route()
+        rid = self.engines[ei].submit(query, deadline=deadline,
+                                      arrival=arrival)
+        gid = next(self._rid)
+        self._local[gid] = (ei, rid)
+        self._gid[(ei, rid)] = gid
+        return gid
+
+    def _globalize(self, ei: int,
+                   responses: List[EngineResponse]
+                   ) -> List[EngineResponse]:
+        out = []
+        for r in responses:
+            gid = self._gid.pop((ei, r.rid))
+            del self._local[gid]
+            out.append(dataclasses.replace(r, rid=gid))
+        return out
+
+    # --------------------------------------------------------------- drive
+    def pending(self) -> int:
+        return sum(e.pending() for e in self.engines)
+
+    def step(self) -> List[EngineResponse]:
+        """One fleet step: every replica with work steps once (its own
+        continuous-batching wave); responses come back with global rids."""
+        out: List[EngineResponse] = []
+        for ei, eng in enumerate(self.engines):
+            if eng.pending():
+                out.extend(self._globalize(ei, eng.step()))
+        return out
+
+    def drain(self) -> List[EngineResponse]:
+        out: List[EngineResponse] = []
+        while self.pending():
+            out.extend(self.step())
+        for ei, eng in enumerate(self.engines):     # flush buffered
+            out.extend(self._globalize(ei, eng.step()))
+        return out
+
+    def serve(self, queries: Sequence[np.ndarray],
+              deadlines: Optional[Sequence[Optional[float]]] = None
+              ) -> List[EngineResponse]:
+        """Submit a batch across the fleet and drain it; responses in
+        global request-id (= submission) order."""
+        for i, q in enumerate(queries):
+            self.submit(q, deadline=deadlines[i] if deadlines else None)
+        return sorted(self.drain(), key=lambda r: r.rid)
+
+    def warmup(self, sample: Sequence[np.ndarray],
+               reset_counters: bool = True) -> None:
+        """Warm every replica.  Compiled programs (waves, scans, solvers)
+        are process-global, so replica 0 pays the compiles and the rest
+        sweep compile-free — but each replica still primes its own
+        stream cache and shape buckets."""
+        for eng in self.engines:
+            eng.warmup(sample, reset_counters=reset_counters)
+
+    def summary(self) -> dict:
+        """Fleet metrics: per-replica summaries + fleet totals."""
+        per = [e.summary() for e in self.engines]
+        return {
+            "replicas": len(self.engines),
+            "collection": self.collection.describe(),
+            "requests": sum(p["requests"] for p in per),
+            "waves": sum(p["scheduler"]["waves"] for p in per),
+            "per_replica": per,
+        }

@@ -164,6 +164,38 @@ def test_fused_engine_steady_state_zero_recompiles(small_world):
     assert (_wave_fn.cache_info().currsize, _jit_cache_sizes()) == before
 
 
+def test_sharded_engine_warmup_zero_steady_state_recompiles(small_world):
+    """PR-6 invariant: engine warmup sweeps the SHARD-LOCAL pow2
+    chunk-bucket grid (each shard's inverted index yields different
+    event counts for the same query), so a 4-shard fused engine serving
+    varying batch sizes within one pow2 bucket compiles NOTHING after
+    warmup — wave programs, refinement scans, solvers, similarity
+    blocks, and the top-k merge tree are all primed per shard."""
+    from repro.core.search import _merge_tree_fn
+    from repro.core.wave import _wave_fn
+    from repro.runtime.collection import ShardedCollection
+    from repro.runtime.engine import RequestEngine
+
+    coll, sim = small_world
+    params = SearchParams(k=5, alpha=0.8, chunk_size=64, verify_batch=8,
+                          fused="interpret")
+    sc = ShardedCollection.build(coll, 4)
+    pool = sample_queries(coll, 8, seed=3)
+    batches = [pool[:bs] for bs in (5, 6, 7, 8, 6)]
+
+    eng = RequestEngine(None, sim, params, schedule="fused", collection=sc)
+    assert eng.schedule == "fused"
+    assert eng.collection is sc
+    eng.warmup(pool)
+    before = (_wave_fn.cache_info().currsize,
+              _merge_tree_fn.cache_info().currsize, _jit_cache_sizes())
+    for batch in batches:
+        eng.serve(batch)
+    assert (_wave_fn.cache_info().currsize,
+            _merge_tree_fn.cache_info().currsize,
+            _jit_cache_sizes()) == before
+
+
 def test_fused_wave_variants_shared_across_batches(small_world):
     """The wave program's static config depends only on pow2-padded
     shapes: rerunning the fused schedule with a different batch of the
