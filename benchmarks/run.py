@@ -17,7 +17,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[None, "pruning", "response", "parameters",
-                             "quality", "kernels", "roofline"])
+                             "quality", "kernels", "roofline", "soak"])
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args(argv)
 
@@ -103,6 +103,11 @@ def main(argv=None) -> None:
                                        sim_kind="ngram",
                                        include_baseline=False):
                 print(f"{r['dataset']},ngram,koios_s={r['koios_s']:.2f}")
+
+    if want("soak"):
+        _banner("Fault-injected soak: failover + deadline shedding")
+        from . import soak
+        soak.main(["--fast"] if args.fast else [])
 
     if want("parameters"):
         _banner("Fig 7: parameter analysis")

@@ -1,4 +1,4 @@
-"""Vectorized KOIOS bounds & filters (paper §III & §V, DESIGN.md §2/§7.5).
+"""Vectorized KOIOS bounds & filters (paper §III & §V, DESIGN.md §2/§8.5).
 
 All filter state is dense per-set arrays; every bound update is a masked
 vector pass over the live sets (replacing the paper's event-driven bucket
@@ -11,7 +11,7 @@ Bounds implemented:
     UNSOUND, kept only for reproducing the paper's pruning-power numbers);
   * iUB sound mode — T + max(0, cap - d) * s_now  where T is the sum of the
     first-seen similarity of each distinct query element streamed with C and
-    d their count (DESIGN.md §7.5 — provably >= SO);
+    d their count (DESIGN.md §8.5 — provably >= SO);
   * theta_lb — k-th largest LB over candidate sets (Lemma 4).
 """
 from __future__ import annotations

@@ -15,7 +15,7 @@ Survivors of the refinement carry bounds [lb, ub].  We repeatedly:
      top-k by lb.
 
 Verification recomputes the (|Q| x |C|) similarity block on the fly (MXU)
-instead of caching refinement similarities — see DESIGN.md §8 item 7.
+instead of caching refinement similarities — see DESIGN.md §9 item 7.
 
 Multi-query serving (the batched pipeline): the loop above is factored into
 a :class:`PostprocessState` state machine that *requests* verification

@@ -11,7 +11,7 @@ so the phase is exact for both ub modes' soundness guarantees.
 State arrays (per set):
   S, l      — partial greedy matching score / cardinality (iLB, Lemma 5)
   T, d      — sum / count of first-seen sims per distinct query element
-              (sound iUB', DESIGN.md §7.5)
+              (sound iUB', DESIGN.md §8.5)
   seen      — appeared in the stream (candidate set)
   alive     — not pruned
   qmatched  — (num_sets, ceil(|Q|/32)) uint32 greedy q-side occupancy

@@ -114,7 +114,7 @@ class ExecutionPlan:
     itself).
     """
 
-    # Plan-query ring bounds (DESIGN.md §8 item 9): once more than
+    # Plan-query ring bounds (DESIGN.md §9 item 9): once more than
     # ``compact_threshold`` of a plan's query slots are retired
     # tombstones (and the list is at least ``compact_min`` long),
     # ``retire_tiles`` compacts the append-only list in place — a
@@ -176,7 +176,7 @@ class ExecutionPlan:
         long-running engine plan does not accumulate finished work;
         their queries-list slots are tombstoned, and once tombstones
         exceed ``compact_threshold`` of a ``compact_min``-sized list the
-        list is compacted in place (the bounded ring, DESIGN.md §8 item
+        list is compacted in place (the bounded ring, DESIGN.md §9 item
         9).  Returns the {old_qi: new_qi} remap when a compaction
         happened (callers holding qi-indexed state — the request engine
         — must apply it), else None."""

@@ -73,7 +73,7 @@ def partition_ranges(set_sizes: np.ndarray, partitions: int,
     """Contiguous partition boundaries over the repository (paper §VI).
 
     ``by='sets'``: equal set counts (``np.linspace`` — the historical
-    default).  ``by='tokens'``: greedy token-count balancer (DESIGN.md §8
+    default).  ``by='tokens'``: greedy token-count balancer (DESIGN.md §9
     item 5, resolved): walk the prefix token counts and cut at whichever
     set boundary lands nearest each i/P share of the total, so every
     partition's token count is within half the largest set of the ideal

@@ -107,7 +107,7 @@ def _finalize_stream(query: np.ndarray, q_pos: np.ndarray, token: np.ndarray,
 def _build_stream_entries_kernel(stacked: np.ndarray, sim_provider,
                                  alpha: float, block_size: int):
     """(row, token, sim >= alpha) triples via the ``cosine_topk`` Pallas
-    kernel (DESIGN.md §6) instead of the jnp provider sweep.
+    kernel (DESIGN.md §7) instead of the jnp provider sweep.
 
     The kernel keeps a running top-k on-chip, so the (rows x |V|) score
     matrix never round-trips to HBM; ``k`` doubles until no row's k-th

@@ -119,7 +119,7 @@ class SearchParams:
     # EXPERIMENTS.md §Perf KOIOS-engine notes)
     verifier: str = "hungarian"
     auction_eps: float = 1e-4      # final epsilon of eps-scaling
-    # 'sound' = corrected per-query-element iUB (DESIGN.md §7.5);
+    # 'sound' = corrected per-query-element iUB (DESIGN.md §8.5);
     # 'paper'  = the paper's Lemma-6 bound (unsound; reproduction mode only)
     ub_mode: str = "sound"
     # beyond-paper: stop the stream once no unseen set can enter the top-k

@@ -2,7 +2,7 @@
 
 One device program per partition *wave* — the partition's (query x
 partition) tiles for the whole request batch — chaining what the overlap
-schedule round-trips through the host (DESIGN.md §8 item 6, resolved):
+schedule round-trips through the host (DESIGN.md §9 item 6, resolved):
 
   Stage A0 device-resident event expansion (DESIGN.md §3.3): the wave
            consumes the COMPACT token stream — (token, q, sim) tuples,
@@ -229,7 +229,7 @@ def _wave_fn(cfg: WaveConfig, mesh):
             # the tightened bracket but stays unverified, so the host
             # continuation re-verifies it with the pool's exact fallback.
             # Paying a vmapped exact solve on-device for every row would
-            # forfeit the auction's entire advantage (DESIGN.md §8 item 4)
+            # forfeit the auction's entire advantage (DESIGN.md §9 item 4)
             # in the common no-ambiguity case.
             amb = (~early) & (a_lb < th_b) & (a_ub > th_b)
             if cfg.verifier == "hybrid":

@@ -1,4 +1,4 @@
-"""Pallas TPU kernels for the paper's compute hot spots (DESIGN.md §6):
+"""Pallas TPU kernels for the paper's compute hot spots (DESIGN.md §7):
 
   cosine_topk     — blocked cosine similarity + running top-k (token stream)
   auction_topk2   — fused profit top-2 (auction verification round)

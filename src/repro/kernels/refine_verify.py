@@ -25,7 +25,7 @@ and by standalone callers:
   doesn't.
 
 Both have pure-jnp oracles in ``ref.py`` and interpret-mode dispatch in
-``ops.py`` (the repo-wide kernel convention, DESIGN.md §6).
+``ops.py`` (the repo-wide kernel convention, DESIGN.md §7).
 """
 from __future__ import annotations
 

@@ -11,7 +11,10 @@ batch.  ``--fused`` drives each wave's partition groups as fused
 on-device programs (DESIGN.md §3.1); ``--mesh-bounds`` runs the theta_lb
 exchange as a real all-reduce-max over the repository mesh (DESIGN.md
 §5).  ``--per-query`` keeps the per-query one-shot loop as the A/B
-baseline (bit-identical results).
+baseline (bit-identical results).  ``--deadline-ms``/``--shed`` exercise
+the fault-tolerant serving plane (DESIGN.md §6): per-request deadlines
+with deadline-aware shedding, and the summary reports p50/p99 latency,
+deadline-met ratio, and shed/retry/failed accounting.
 
 Smoke scale:
     PYTHONPATH=src python -m repro.launch.serve --requests 4 --k 5
@@ -34,6 +37,9 @@ def _response_dict(r) -> dict:
     return {
         "ids": r.result.ids.tolist(),
         "scores": r.result.lb.tolist(),
+        "status": r.status,                     # ok | shed | retried | failed
+        "retries": r.retries,
+        "reason": r.reason,
         "latency_s": round(r.latency_s, 4),     # true per-request
         "queue_s": round(r.queue_s, 4),
         "waves": r.waves,
@@ -62,7 +68,8 @@ class SearchServer:
     def __init__(self, coll, sim, params: SearchParams, partitions: int,
                  schedule: str = "overlap", bound_exchange=None, mesh=None,
                  stream_cache_capacity: int = 512, replicas: int = 1,
-                 shards: int = 0, place: bool = False):
+                 shards: int = 0, place: bool = False,
+                 shed_deadlines: bool = False, fault_plan=None):
         from ..runtime.collection import ShardedCollection
         from ..runtime.engine import AdmissionRouter
 
@@ -76,7 +83,10 @@ class SearchServer:
         engine_kwargs = dict(
             schedule="fused" if schedule == "fused" else "wave",
             bound_exchange=bound_exchange, mesh=mesh,
-            stream_cache_capacity=stream_cache_capacity)
+            stream_cache_capacity=stream_cache_capacity,
+            shed_deadlines=shed_deadlines)
+        if fault_plan is not None and replicas > 1:
+            engine_kwargs["fault_plan"] = fault_plan
         if replicas > 1:
             self.engine = AdmissionRouter(
                 None, sim, params, replicas=replicas,
@@ -132,6 +142,15 @@ def main(argv=None):
                     help="replay the request trace with this inter-arrival "
                          "gap instead of submitting each batch at once "
                          "(continuous batching joins mid-flight)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline (admit + this many ms); "
+                         "reported met/missed per response, and with "
+                         "--shed doomed requests are dropped before "
+                         "occupying a wave tile (status=shed)")
+    ap.add_argument("--shed", action="store_true",
+                    help="deadline-aware shedding (DESIGN.md §6): requests "
+                         "whose deadline is already unreachable respond "
+                         "status=shed instead of burning wave tiles")
     ap.add_argument("--per-query", action="store_true",
                     help="serve each query independently through the "
                          "one-shot path (A/B baseline for the engine)")
@@ -171,7 +190,7 @@ def main(argv=None):
                           schedule=schedule,
                           bound_exchange=bound_exchange, mesh=mesh,
                           replicas=args.replicas, shards=args.shards,
-                          place=args.place)
+                          place=args.place, shed_deadlines=args.shed)
     desc = server.collection.describe()
     placed = [s["device"] for s in desc["shards"] if s["device"]]
     print(f"[serve] corpus: {coll.num_sets} sets, vocab {coll.vocab_size}, "
@@ -180,22 +199,32 @@ def main(argv=None):
           + (f", {args.replicas} replicas" if args.replicas > 1 else ""))
 
     queries = sample_queries(coll, args.requests, seed=1)
+    dl = args.deadline_ms / 1e3 if args.deadline_ms else None
     for lo in range(0, len(queries), args.batch_size):
         batch = queries[lo:lo + args.batch_size]
         if args.stagger_ms and not args.per_query:
             now = server.engine.clock()
             for i, q in enumerate(batch):
+                t_arr = now + i * args.stagger_ms / 1e3
                 server.engine.submit(
-                    q, arrival=now + i * args.stagger_ms / 1e3)
+                    q, arrival=t_arr,
+                    deadline=t_arr + dl if dl else None)
             results = [_response_dict(r)
                        for r in sorted(server.engine.drain(),
                                        key=lambda r: r.rid)]
         else:
-            results = server.serve_batch(batch,
-                                         batched=not args.per_query)
+            now = server.engine.clock()
+            results = server.serve_batch(
+                batch, batched=not args.per_query,
+                deadlines=[now + dl] * len(batch) if dl else None)
         for i, r in enumerate(results):
+            if not args.per_query and r["status"] in ("shed", "failed"):
+                print(f"req {lo+i}: {r['status']} ({r['reason']}) "
+                      f"lat={r['latency_s']}s waves={r['waves']}")
+                continue
             extra = ("" if args.per_query else
-                     f"queue={r['queue_s']}s waves={r['waves']} "
+                     f"status={r['status']} queue={r['queue_s']}s "
+                     f"waves={r['waves']} "
                      f"cached={r['stream_cache_hit']} ")
             print(f"req {lo+i}: top-{args.k} ids={r['ids'][:5]}... "
                   f"scores={[round(s,2) for s in r['scores'][:5]]} "
@@ -206,15 +235,25 @@ def main(argv=None):
         replicas = s.get("per_replica", [s])
         if "per_replica" in s:
             print(f"  [router] replicas={s['replicas']} "
+                  f"(healthy={s['healthy_replicas']}) "
                   f"requests={s['requests']} waves={s['waves']} "
+                  f"shed={s['shed']} retries={s['retries']} "
+                  f"failed={s['failed']} "
+                  f"quarantines={s['quarantines']} "
+                  f"p50={s['p50_latency_s']:.4f}s "
+                  f"p99={s['p99_latency_s']:.4f}s "
                   f"device_bytes={s['collection']['device_bytes']}")
         for ri, p in enumerate(replicas):
             cache = p["stream_cache"]
             tag = f"replica {ri}" if "per_replica" in s else "engine"
             print(f"  [{tag}] schedule={p['schedule']} "
-                  f"requests={p['requests']} steps={p['steps']} "
+                  f"requests={p['requests']} served={p['served']} "
+                  f"shed={p['shed']} steps={p['steps']} "
                   f"mean_lat={p['mean_latency_s']:.4f}s "
+                  f"p50={p['p50_latency_s']:.4f}s "
                   f"p95={p['p95_latency_s']:.4f}s "
+                  f"p99={p['p99_latency_s']:.4f}s "
+                  f"deadline_met={p['deadline_met_ratio']:.2f} "
                   f"mean_queue_depth={p['mean_queue_depth']:.1f} "
                   f"waves={p['scheduler']['waves']} "
                   f"cache_hit_rate={cache['hit_rate']:.2f} "

@@ -3,7 +3,7 @@
 The training/prefill path uses the chunked SSD formulation (quadratic within
 a chunk — MXU matmuls — linear across chunks); it is mathematically the same
 computation as ``repro.kernels.ssd_scan`` (the Pallas TPU kernel) and is the
-path the dry-run lowers so XLA cost analysis stays truthful (DESIGN.md §6).
+path the dry-run lowers so XLA cost analysis stays truthful (DESIGN.md §7).
 Decode is the O(1) recurrence over (H, P, S) state + a (conv_width-1) FIFO.
 """
 from __future__ import annotations

@@ -54,8 +54,19 @@ from ..core.scheduler import (ExecutionPlan, SchedulerStats, _exchange,
 from ..core.search import KoiosIndex, merge_topk
 from ..core.token_stream import (TokenStreamCache,
                                  build_token_stream_batch_cached)
-from ..core.types import SearchParams, SearchResult
-from .instrument import EngineCounters, RequestTrace
+from ..core.types import SearchParams, SearchResult, SearchStats
+from .fault import (FaultConfig, FaultPlan, FleetMonitor, ReplicaCrash,
+                    TransientVerifierError)
+from .instrument import EngineCounters, RequestTrace, record
+
+
+def _void_result() -> SearchResult:
+    """The result payload of a non-served response (shed / failed): an
+    empty top-k, never a partial one — served responses stay exactly
+    bit-identical to the one-shot path or are not served at all."""
+    return SearchResult(ids=np.zeros(0, np.int32),
+                        lb=np.zeros(0, np.float32),
+                        ub=np.zeros(0, np.float32), stats=SearchStats())
 
 
 @dataclasses.dataclass
@@ -80,7 +91,15 @@ class _Request:
 class EngineResponse:
     """What ``respond`` emits: the merged result + true per-request
     lifecycle timings (the numbers ``serve_batch`` used to fake with one
-    amortized figure)."""
+    amortized figure).
+
+    ``status`` makes the outcome explicit (DESIGN.md §6) instead of
+    implying success: ``ok`` = served, bit-identical to the one-shot
+    path; ``shed`` = dropped before occupying a wave tile because its
+    deadline was already unreachable (``result`` is empty); ``retried``
+    = served ``ok`` after ``retries`` failover resubmissions (same
+    exactness guarantee as ``ok``); ``failed`` = the retry budget ran
+    out or no healthy replica existed (``reason`` says which)."""
 
     rid: int
     result: SearchResult
@@ -89,6 +108,13 @@ class EngineResponse:
     waves: int
     stream_hit: bool
     deadline_met: Optional[bool]
+    status: str = "ok"                   # ok | shed | retried | failed
+    retries: int = 0                     # failover resubmissions served
+    reason: str = ""                     # shed/failed explanation
+
+    @property
+    def served(self) -> bool:
+        return self.status in ("ok", "retried")
 
 
 class RequestEngine:
@@ -124,7 +150,11 @@ class RequestEngine:
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
                  indexes: Optional[Sequence[KoiosIndex]] = None,
-                 collection=None):
+                 collection=None,
+                 shed_deadlines: bool = False,
+                 fault_plan: Optional[FaultPlan] = None,
+                 replica_id: int = 0,
+                 monitor: Optional[FleetMonitor] = None):
         from .collection import ShardedCollection
 
         self.params = params or SearchParams()
@@ -171,6 +201,19 @@ class RequestEngine:
         self._queue: List[_Request] = []          # admitted, awaiting join
         self._inflight: Dict[int, _Request] = {}  # rid -> joined request
         self._completed: List[EngineResponse] = []
+
+        # ---- fault-tolerant serving plane (DESIGN.md §6) ----
+        # shed_deadlines: drop requests whose deadline is already
+        # unreachable BEFORE they occupy a wave tile (status='shed');
+        # off by default — shedding changes which requests are answered,
+        # so it is an explicit serving policy, never a silent one.
+        self.shed_deadlines = bool(shed_deadlines)
+        self.fault_plan = fault_plan
+        self.replica_id = int(replica_id)
+        self.monitor = monitor
+        self._step_no = 0                         # 1-based after first step
+        self._wave_ewma = 0.0                     # smoothed wave seconds
+        self._last_wave = 0                       # tiles run by last step
 
     # ------------------------------------------------------------- admit
     def submit(self, query, deadline: Optional[float] = None,
@@ -258,14 +301,35 @@ class RequestEngine:
                 self._theta[qi] = max(self._theta[qi], float(v))
 
     def step(self) -> List[EngineResponse]:
-        """One continuous-batching step: admit arrivals, join the queue,
-        run one wave (a tile per live request at its next partition),
-        respond to whoever finished.  Returns the step's responses."""
+        """One continuous-batching step: admit arrivals, shed the doomed
+        (deadline already unreachable — BEFORE any wave tile is spent on
+        them), join the queue, run one wave (a tile per live request at
+        its next partition), respond to whoever finished.  Returns the
+        step's responses.  Each step heartbeats into the attached
+        :class:`FleetMonitor` (the router's health plane) and fires any
+        :class:`FaultPlan` events addressed to this replica+step."""
+        t_enter = self.clock()
+        self._step_no += 1
+        self._last_wave = 0
+        verify_fault = False
+        if self.fault_plan is not None:
+            for ev in self.fault_plan.take(self.replica_id, self._step_no):
+                if ev.kind == "crash":
+                    raise ReplicaCrash(
+                        f"replica {self.replica_id} crashed at engine "
+                        f"step {self._step_no}")
+                if ev.kind == "stall":
+                    self._sleep(ev.stall_s)
+                elif ev.kind == "verify_error":
+                    verify_fault = True
         now = self.clock()
         self._admit_arrived(now)
+        if self.shed_deadlines:
+            self._shed_pass(now)
         depth = len(self._queue)
         self._join(now)
         if not self._inflight:
+            self._heartbeat(t_enter)
             out, self._completed = self._completed, []
             return out
 
@@ -279,15 +343,76 @@ class RequestEngine:
             wave.append(tile)
             reqs.append((req, pi))
         self.counters.observe_step(queue_depth=depth, wave_size=len(wave))
+        self._last_wave = len(wave)
+        if verify_fault:
+            raise TransientVerifierError(
+                f"replica {self.replica_id} verification fault at engine "
+                f"step {self._step_no}")
+        t_wave = self.clock()
         self._run_wave_tiles(wave)
 
         t_done = self.clock()
+        dt = t_done - t_wave
+        self._wave_ewma = (dt if self._wave_ewma == 0.0
+                           else 0.5 * dt + 0.5 * self._wave_ewma)
         for req, pi in reqs:
             req.parts[pi] = self._tiles[req.qi][pi].result
             if not req.pending:
                 self._respond(req, t_done)
+        self._heartbeat(t_enter)
         out, self._completed = self._completed, []
         return out
+
+    def _heartbeat(self, t_enter: float) -> None:
+        if self.monitor is not None:
+            self.monitor.heartbeat(self.replica_id, self._step_no,
+                                   self.clock() - t_enter)
+
+    # ----------------------------------------------------------- shedding
+    def _deadline_unreachable(self, req: _Request, now: float,
+                              waves_left: int) -> bool:
+        """True when even the optimistic service estimate (smoothed wave
+        seconds x remaining partition waves) cannot meet the deadline.
+        With no wave history yet the estimate is 0 — only requests whose
+        deadline has ALREADY passed are shed (never a guess)."""
+        d = req.trace.deadline
+        return d is not None and now + self._wave_ewma * waves_left > d
+
+    def _shed_pass(self, now: float) -> None:
+        """Deadline-aware admission + wave sizing: shed doomed requests
+        from the admission queue (before their stream is ever built) and
+        from the in-flight cohort (before they occupy another tile of
+        the wave being formed)."""
+        waves_full = len(self.partitions)
+        keep = []
+        for req in self._queue:
+            if self._deadline_unreachable(req, now, waves_full):
+                self._shed(req, now, joined=False)
+            else:
+                keep.append(req)
+        self._queue = keep
+        for req in [r for r in self._inflight.values()
+                    if self._deadline_unreachable(r, now, len(r.pending))]:
+            self._shed(req, now, joined=True)
+
+    def _shed(self, req: _Request, now: float, joined: bool) -> None:
+        """Emit a ``status='shed'`` response without spending a wave tile
+        (instrument event ``engine:shed`` is the audit trail)."""
+        req.trace.t_respond = now
+        req.trace.status = "shed"
+        record("engine:shed")
+        self.counters.observe_respond(req.trace)
+        est = self._wave_ewma * (len(req.pending) if joined
+                                 else len(self.partitions))
+        self._completed.append(EngineResponse(
+            rid=req.rid, result=_void_result(),
+            latency_s=req.trace.latency_s, queue_s=max(req.trace.queue_s, 0.0),
+            waves=req.trace.waves, stream_hit=req.trace.stream_hit,
+            deadline_met=False, status="shed",
+            reason=f"deadline unreachable (estimate {est:.4f}s, "
+                   f"deadline {req.trace.deadline - now:+.4f}s away)"))
+        if joined:
+            self._retire(req)
 
     # ------------------------------------------------------------ respond
     def _respond(self, req: _Request, t_done: float) -> None:
@@ -300,6 +425,10 @@ class RequestEngine:
             latency_s=req.trace.latency_s, queue_s=req.trace.queue_s,
             waves=req.trace.waves, stream_hit=req.trace.stream_hit,
             deadline_met=req.trace.deadline_met))
+        self._retire(req)
+
+    def _retire(self, req: _Request) -> None:
+        """Release a joined request's plan/stream/tile state."""
         del self._inflight[req.rid]
         del self._tiles[req.qi]
         self._streams[req.qi] = None      # the LRU cache keeps the stream
@@ -307,7 +436,7 @@ class RequestEngine:
         remap = self.plan.retire_tiles([req.qi])
         if remap is not None:
             # the plan compacted its query ring (bounded plan size for
-            # long-lived engines, DESIGN.md §8 item 9): shift every
+            # long-lived engines, DESIGN.md §9 item 9): shift every
             # qi-indexed engine structure through the same remap
             order = sorted(remap)        # old qis ascending == new order
             self._streams = [self._streams[old] for old in order]
@@ -316,6 +445,28 @@ class RequestEngine:
                            for old, tiles in self._tiles.items()}
             for r in self._inflight.values():
                 r.qi = remap[r.qi]
+
+    # ---------------------------------------------------------- evacuate
+    def evacuate(self) -> "tuple[List[EngineResponse], List[tuple]]":
+        """Quarantine support (DESIGN.md §6): hand back everything this
+        replica still owes — its buffered (already computed, still
+        valid) responses plus a ``(rid, query, deadline)`` spec for
+        every un-responded request — and reset all per-request state so
+        the requests can be resubmitted elsewhere with no risk of a
+        duplicate respond here.  Request-independent resources (stream
+        cache, verifier pool, compiled wave programs, the borrowed
+        collection) survive: a revived replica serves fresh requests
+        immediately."""
+        done, self._completed = self._completed, []
+        pend = sorted(itertools.chain(self._arrivals, self._queue,
+                                      self._inflight.values()),
+                      key=lambda r: r.rid)
+        specs = [(r.rid, r.query, r.trace.deadline) for r in pend]
+        self._arrivals, self._queue = [], []
+        self._inflight, self._tiles = {}, {}
+        self._streams, self._theta = [], []
+        self.plan = ExecutionPlan(self.partitions, [], pool_coll=self.coll)
+        return done, specs
 
     # ------------------------------------------------------------- warmup
     def warmup(self, sample: Sequence[np.ndarray],
@@ -415,14 +566,29 @@ class RequestEngine:
 
     def drain(self, max_idle_wait_s: float = 0.01) -> List[EngineResponse]:
         """Step until every submitted request (including future-dated
-        arrivals) has responded; idle gaps sleep until the next arrival."""
+        arrivals) has responded.
+
+        No busy-spin: an idle gap before a known future arrival sleeps
+        the FULL gap in one call (arrivals are the only thing that can
+        wake a single-threaded engine, so the historical 10ms-capped
+        sleep just woke up ~100x/s to re-discover the same gap), and a
+        step that moved nothing while in-flight work is still pending
+        (a deferred/empty wave under shedding or fault injection) backs
+        off exponentially, capped at ``max_idle_wait_s``."""
         out: List[EngineResponse] = []
+        idle = max_idle_wait_s / 16
         while self.pending():
+            n0 = len(out)
             out.extend(self.step())
-            if not self._inflight and not self._queue and self._arrivals:
+            if len(out) > n0 or self._last_wave:
+                idle = max_idle_wait_s / 16          # progress: reset
+            elif self._inflight or self._queue:
+                self._sleep(idle)                    # pending but stuck
+                idle = min(2 * idle, max_idle_wait_s)
+            elif self._arrivals:
                 wait = self._arrivals[0].arrival - self.clock()
                 if wait > 0:
-                    self._sleep(min(wait, max_idle_wait_s))
+                    self._sleep(wait)
         out.extend(self.step())           # flush any buffered responses
         return out
 
@@ -447,9 +613,28 @@ class RequestEngine:
         return out
 
 
+@dataclasses.dataclass(frozen=True)
+class RouterPolicy:
+    """Failover knobs of the admission router (DESIGN.md §6).
+
+    ``retry_budget`` bounds how many times one request may be
+    resubmitted after its replica was quarantined (beyond it the
+    request responds ``failed`` — never silently dropped);
+    ``backoff_s`` is the base of the exponential resubmission delay
+    (``backoff_s * 2**(attempt-1)``), so a flapping fleet is not
+    hammered by the same request; ``revive_after_s`` is the quarantine
+    cooldown after which a revivable (stalled / transient-error)
+    replica rejoins the fleet — crashes are permanent."""
+
+    retry_budget: int = 2
+    backoff_s: float = 0.02
+    revive_after_s: float = 0.25
+
+
 class AdmissionRouter:
     """N :class:`RequestEngine` replicas over ONE logical collection
-    behind a single front door (DESIGN.md §5).
+    behind a single front door (DESIGN.md §5), with a per-replica
+    health plane (DESIGN.md §6).
 
     Every replica serves the SAME :class:`ShardedCollection` resource —
     per-shard device operands are uploaded once and borrowed by all, and
@@ -457,19 +642,37 @@ class AdmissionRouter:
     programs through ``wave_runner_for`` — so a replica costs one plan +
     one verifier pool + one stream cache, not another copy of the
     repository.  The router admits requests with a global request id,
-    routes each to the least-loaded replica (fewest lifecycle-pending
-    requests; round-robin among ties, so an idle fleet still spreads
-    arrivals), and merges responses back into global-rid order.  Replica
-    count scales the host-side serving loop (admission, stream sweeps,
-    postprocess continuation) over one repository; exactness is per
-    replica — every response is bit-identical to a one-shot
-    ``KoiosSearch.search_batch`` over the same collection, so routing
-    cannot perturb any result (tests/test_sharded_collection.py)."""
+    routes each to the least-loaded HEALTHY replica (fewest
+    lifecycle-pending requests; round-robin among ties, so an idle
+    fleet still spreads arrivals), and merges responses back into
+    global-rid order.
+
+    Health: every engine step heartbeats into the shared
+    :class:`FleetMonitor`.  A replica that raises, exceeds the
+    straggler bound for ``FaultConfig.straggler_patience`` steps, or
+    hangs past ``FaultConfig.heartbeat_timeout`` within one step is
+    quarantined: its un-responded requests are evacuated and resubmitted
+    to healthy replicas over the same shared collection (no re-upload),
+    with a bounded retry budget and exponential backoff
+    (:class:`RouterPolicy`).  A request served after failover responds
+    ``status='retried'``; one that exhausts the budget (or finds no
+    healthy replica) responds ``status='failed'`` with a reason —
+    never an unhandled exception.  Global response ordering (sorted
+    global rids) is preserved across failovers because a resubmitted
+    request keeps its gid.
+
+    Exactness is per replica — every SERVED response is bit-identical
+    to a one-shot ``KoiosSearch.search_batch`` over the same
+    collection, whether it was served first-try or after failover, so
+    neither routing nor recovery can perturb any served result
+    (tests/test_sharded_collection.py, tests/test_fault.py)."""
 
     def __init__(self, coll, sim_provider,
                  params: Optional[SearchParams] = None, replicas: int = 2,
                  partitions: int = 1, partition_by: str = "sets",
-                 collection=None, **engine_kwargs):
+                 collection=None, policy: RouterPolicy = RouterPolicy(),
+                 fault_config: FaultConfig = FaultConfig(),
+                 fault_plan: Optional[FaultPlan] = None, **engine_kwargs):
         from .collection import ShardedCollection
 
         assert replicas >= 1, replicas
@@ -477,32 +680,60 @@ class AdmissionRouter:
             collection = ShardedCollection.build(coll, partitions,
                                                  by=partition_by)
         self.collection = collection
+        self.policy = policy
+        self.monitor = FleetMonitor(
+            replicas, fault_config,
+            clock=engine_kwargs.get("clock", time.monotonic))
         self.engines = [
             RequestEngine(None, sim_provider, params,
-                          collection=collection, **engine_kwargs)
-            for _ in range(replicas)]
+                          collection=collection, monitor=self.monitor,
+                          replica_id=ei, fault_plan=fault_plan,
+                          **engine_kwargs)
+            for ei in range(replicas)]
         self.clock = self.engines[0].clock       # shared trace clock
+        self._sleep = self.engines[0]._sleep
         self._rid = itertools.count()
         self._local: Dict[int, "tuple[int, int]"] = {}  # gid -> (eng, rid)
         self._gid: Dict["tuple[int, int]", int] = {}    # inverse
         self._rr = itertools.count()                    # tie-break cursor
+        # ---- health / failover state ----
+        self._quarantined: Dict[int, dict] = {}   # ei -> {t, reason, ...}
+        self._attempts: Dict[int, int] = {}       # gid -> resubmissions
+        self._failed: List[EngineResponse] = []   # buffered failed resp.
+        self.quarantine_log: List[dict] = []      # audit trail (soak)
+        self.retries = 0                          # resubmissions issued
+        self.failures = 0                         # failed responses
+        self._t_last_recovered: Optional[float] = None
 
     # ------------------------------------------------------------- routing
+    def healthy(self) -> List[int]:
+        return [ei for ei in range(len(self.engines))
+                if ei not in self._quarantined]
+
     def route(self) -> int:
-        """Replica index for the next admit: least pending, round-robin
-        among ties (deterministic under the injectable clocks)."""
-        loads = [e.pending() for e in self.engines]
+        """Replica index for the next admit: least pending among HEALTHY
+        replicas, round-robin among ties (deterministic under the
+        injectable clocks); -1 when the whole fleet is quarantined."""
+        healthy = self.healthy()
+        if not healthy:
+            return -1
+        loads = [self.engines[ei].pending() for ei in healthy]
         lo = min(loads)
-        ties = [i for i, n in enumerate(loads) if n == lo]
+        ties = [ei for ei, n in zip(healthy, loads) if n == lo]
         return ties[next(self._rr) % len(ties)]
 
     def submit(self, query, deadline: Optional[float] = None,
                arrival: Optional[float] = None) -> int:
-        """Admit one request to the fleet; returns its GLOBAL rid."""
+        """Admit one request to the fleet; returns its GLOBAL rid.  With
+        every replica quarantined the request responds ``failed`` (with
+        a reason) instead of raising."""
+        gid = next(self._rid)
         ei = self.route()
+        if ei < 0:
+            self._fail(gid, "all replicas quarantined at admission")
+            return gid
         rid = self.engines[ei].submit(query, deadline=deadline,
                                       arrival=arrival)
-        gid = next(self._rid)
         self._local[gid] = (ei, rid)
         self._gid[(ei, rid)] = gid
         return gid
@@ -514,28 +745,143 @@ class AdmissionRouter:
         for r in responses:
             gid = self._gid.pop((ei, r.rid))
             del self._local[gid]
+            n = self._attempts.pop(gid, 0)
+            if n and r.status == "ok":        # served after failover
+                r = dataclasses.replace(r, status="retried", retries=n)
+                self._t_last_recovered = self.clock()
             out.append(dataclasses.replace(r, rid=gid))
         return out
 
+    # ----------------------------------------------------- fault handling
+    def _fail(self, gid: int, reason: str) -> None:
+        self.failures += 1
+        self._failed.append(EngineResponse(
+            rid=gid, result=_void_result(), latency_s=0.0, queue_s=0.0,
+            waves=0, stream_hit=False, deadline_met=None,
+            status="failed", retries=self._attempts.pop(gid, 0),
+            reason=reason))
+
+    def _quarantine(self, ei: int, reason: str,
+                    revivable: bool) -> List[EngineResponse]:
+        """Evict a replica and fail its requests over: buffered (already
+        computed) responses are kept, every un-responded request is
+        resubmitted to a healthy replica with exponential backoff —
+        each exactly once, under the bounded retry budget."""
+        now = self.clock()
+        self._quarantined[ei] = {"t": now, "reason": reason,
+                                 "revivable": revivable}
+        self.quarantine_log.append({"t": now, "replica": ei,
+                                    "reason": reason,
+                                    "revivable": revivable})
+        self.monitor.evict([ei])
+        record("router:quarantine")
+        done, specs = self.engines[ei].evacuate()
+        out = self._globalize(ei, done)
+        for rid, query, deadline in specs:
+            gid = self._gid.pop((ei, rid))
+            del self._local[gid]
+            n = self._attempts.get(gid, 0) + 1
+            self._attempts[gid] = n
+            if n > self.policy.retry_budget:
+                self._fail(gid, f"retry budget ({self.policy.retry_budget})"
+                                f" exhausted; last replica {ei}: {reason}")
+                continue
+            nei = self.route()
+            if nei < 0:
+                self._fail(gid, f"no healthy replica left "
+                                f"(replica {ei}: {reason})")
+                continue
+            delay = self.policy.backoff_s * (2 ** (n - 1))
+            nrid = self.engines[nei].submit(
+                query, deadline=deadline, arrival=self.clock() + delay)
+            self._local[gid] = (nei, nrid)
+            self._gid[(nei, nrid)] = gid
+            self.retries += 1
+            record("router:retry")
+        return out
+
+    def _maybe_revive(self) -> None:
+        now = self.clock()
+        for ei in [ei for ei, q in self._quarantined.items()
+                   if q["revivable"]
+                   and now - q["t"] >= self.policy.revive_after_s]:
+            del self._quarantined[ei]
+            self.monitor.restore(ei)
+            self.quarantine_log.append({"t": now, "replica": ei,
+                                        "reason": "revived",
+                                        "revivable": True})
+
     # --------------------------------------------------------------- drive
     def pending(self) -> int:
-        return sum(e.pending() for e in self.engines)
+        """Requests admitted but not yet responded (wherever they live —
+        a replica's lifecycle or the failed buffer)."""
+        return len(self._local) + len(self._failed)
 
     def step(self) -> List[EngineResponse]:
-        """One fleet step: every replica with work steps once (its own
-        continuous-batching wave); responses come back with global rids."""
+        """One fleet step: every healthy replica with work steps once
+        (its own continuous-batching wave) under the health plane;
+        responses come back with global rids, failures as ``failed``
+        responses."""
+        self._maybe_revive()
         out: List[EngineResponse] = []
+        timeout = self.monitor.cfg.heartbeat_timeout
         for ei, eng in enumerate(self.engines):
-            if eng.pending():
-                out.extend(self._globalize(ei, eng.step()))
+            if ei in self._quarantined or not eng.pending():
+                continue
+            t0 = self.clock()
+            try:
+                resp = eng.step()
+            except ReplicaCrash as e:
+                out.extend(self._quarantine(ei, str(e), revivable=False))
+                continue
+            except TransientVerifierError as e:
+                out.extend(self._quarantine(ei, str(e), revivable=True))
+                continue
+            out.extend(self._globalize(ei, resp))
+            if self.clock() - t0 > timeout:
+                # the step eventually returned, but past the heartbeat
+                # timeout — a concurrent monitor would have declared the
+                # replica dead mid-step; quarantine it (its just-emitted
+                # responses above are valid and kept)
+                out.extend(self._quarantine(
+                    ei, f"hung step ({self.clock() - t0:.3f}s > "
+                        f"heartbeat timeout {timeout}s)", revivable=True))
+        for ei in self.monitor.stragglers():
+            if ei not in self._quarantined:
+                out.extend(self._quarantine(
+                    ei, "straggler (step latency over "
+                        f"{self.monitor.cfg.straggler_factor}x fleet "
+                        "median)", revivable=True))
+        out.extend(self._failed)
+        self._failed = []
         return out
 
     def drain(self) -> List[EngineResponse]:
+        """Step until every admitted request has responded (ok, shed,
+        retried, or failed).  Idle gaps — backoff resubmissions or
+        future-dated arrivals — sleep to the earliest arrival across the
+        fleet; a quarantine cooldown sleeps in ``revive_after_s`` hops."""
         out: List[EngineResponse] = []
         while self.pending():
+            n0 = len(out)
+            for e in self.engines:    # so _last_wave reflects THIS pass
+                e._last_wave = 0      # (skipped engines keep it stale)
             out.extend(self.step())
+            if len(out) > n0 or any(e._last_wave for e in self.engines):
+                continue                          # progress was made
+            waits = [e._arrivals[0].arrival - self.clock()
+                     for e in self.engines if e._arrivals]
+            if any(e._inflight or e._queue for e in self.engines):
+                continue                          # work ready next step
+            if waits:
+                self._sleep(max(min(waits), 0.0))
+            elif self._quarantined:
+                self._sleep(self.policy.revive_after_s)
+            else:                                 # defensive: never spin
+                self._sleep(0.001)
         for ei, eng in enumerate(self.engines):     # flush buffered
-            out.extend(self._globalize(ei, eng.step()))
+            if ei not in self._quarantined:
+                out.extend(self._globalize(ei, eng.step()))
         return out
 
     def serve(self, queries: Sequence[np.ndarray],
@@ -557,12 +903,25 @@ class AdmissionRouter:
             eng.warmup(sample, reset_counters=reset_counters)
 
     def summary(self) -> dict:
-        """Fleet metrics: per-replica summaries + fleet totals."""
+        """Fleet metrics: per-replica summaries + fleet totals, plus the
+        health plane's failover accounting (DESIGN.md §6)."""
+        from .instrument import _quantile
+
         per = [e.summary() for e in self.engines]
+        lats = sorted(t.latency_s for e in self.engines
+                      for t in e.counters.traces if t.status == "ok")
         return {
             "replicas": len(self.engines),
+            "healthy_replicas": len(self.healthy()),
             "collection": self.collection.describe(),
             "requests": sum(p["requests"] for p in per),
+            "shed": sum(p["shed"] for p in per),
+            "retries": self.retries,
+            "failed": self.failures,
+            "quarantines": len([q for q in self.quarantine_log
+                                if q["reason"] != "revived"]),
+            "p50_latency_s": _quantile(lats, 0.50),
+            "p99_latency_s": _quantile(lats, 0.99),
             "waves": sum(p["scheduler"]["waves"] for p in per),
             "per_replica": per,
         }

@@ -11,12 +11,20 @@ drives (launch/mesh.py, checkpoint/) are the real ones.
 Straggler mitigation: per-step host heartbeats; hosts whose step latency
 exceeds ``straggler_factor`` x the fleet median for ``patience``
 consecutive steps are reported for eviction (the same quiesce/re-mesh path
-as a failure, minus the lost shard)."""
+as a failure, minus the lost shard).
+
+The SERVING plane reuses the same machinery (DESIGN.md §6): every
+``RequestEngine.step`` heartbeats into a :class:`FleetMonitor`, the
+admission router quarantines replicas that raise, straggle, or hang, and
+:class:`FaultPlan` is the deterministic, seeded fault injector (crash at
+a step, stall for a duration, transient verifier error) that tests and
+``benchmarks/soak.py`` drive the whole recovery path with."""
 from __future__ import annotations
 
 import dataclasses
+import random
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -81,6 +89,16 @@ class FleetMonitor:
             self.hosts[h].healthy = False
             self._strag_count[h] = 0
 
+    def restore(self, host_id: int):
+        """Recovery to healthy: a quarantined host that passed its probe
+        re-enters the fleet with a fresh heartbeat and a clean straggler
+        record (its pre-eviction latency history must not re-evict it)."""
+        hs = self.hosts[host_id]
+        hs.healthy = True
+        hs.last_heartbeat = self.clock()
+        hs.step_latency = 0.0
+        self._strag_count[host_id] = 0
+
     def healthy_count(self) -> int:
         return sum(hs.healthy for hs in self.hosts.values())
 
@@ -97,6 +115,98 @@ def plan_elastic_mesh(healthy_chips: int,
     while p * 2 <= data:
         p *= 2
     return (p, model_axis)
+
+
+# --------------------------------------------------------------------------
+# Serving-plane fault injection (DESIGN.md §6).
+#
+# The request engine consumes these: a FaultPlan is attached to a replica
+# (replica index + engine step address each event), and the engine turns
+# the event into the corresponding failure at the top of / inside its
+# step.  The plan is plain data — deterministic, seed-buildable, and
+# inspectable after the run (``fired``) — so a soak run with faults is
+# exactly reproducible.
+
+
+class ReplicaCrash(RuntimeError):
+    """Hard failure of one engine replica: the step never returns.  The
+    router's recovery path treats it as permanent (no revival)."""
+
+
+class TransientVerifierError(RuntimeError):
+    """A verification wave failed transiently (the cubic-cost stage the
+    paper's filters protect is also the longest-running, most
+    preemptible one).  The replica is quarantined but revivable."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One injected fault: fire ``kind`` on ``replica``'s ``step``-th
+    engine step (steps count from 1).  ``stall_s`` is the injected delay
+    for ``kind='stall'``; a stall longer than the fleet's heartbeat
+    timeout is a hang (missed-heartbeat quarantine), shorter repeated
+    stalls trip the straggler detector."""
+
+    kind: str                      # 'crash' | 'stall' | 'verify_error'
+    replica: int
+    step: int
+    stall_s: float = 0.0
+
+    def __post_init__(self):
+        assert self.kind in ("crash", "stall", "verify_error"), self.kind
+
+
+class FaultPlan:
+    """A deterministic fault schedule over a replica fleet.
+
+    Build explicitly from events (tests pin exact scenarios) or draw a
+    reproducible schedule from a seed (``FaultPlan.random`` — the soak
+    harness).  ``take(replica, step)`` pops the events due at that
+    address; each event fires exactly once and is appended to ``fired``
+    (the audit trail benchmarks report)."""
+
+    def __init__(self, events: Iterable[FaultEvent] = ()):
+        self._due: Dict[Tuple[int, int], List[FaultEvent]] = {}
+        self.events = sorted(events, key=lambda e: (e.step, e.replica))
+        for e in self.events:
+            self._due.setdefault((e.replica, e.step), []).append(e)
+        self.fired: List[FaultEvent] = []
+
+    @classmethod
+    def random(cls, seed: int, replicas: int, steps: int,
+               crashes: int = 1, stalls: int = 1, verify_errors: int = 1,
+               stall_s: float = 0.05, protect: Tuple[int, ...] = ()
+               ) -> "FaultPlan":
+        """Seeded schedule: ``crashes`` distinct replicas crash (never
+        the ones in ``protect``, and never all replicas), plus ``stalls``
+        and ``verify_errors`` spread over the remaining fleet."""
+        rng = random.Random(seed)
+        victims = [r for r in range(replicas) if r not in protect]
+        rng.shuffle(victims)
+        crashes = min(crashes, max(len(victims) - 1, 0))
+        events = [FaultEvent("crash", victims[i],
+                             rng.randrange(2, max(steps, 3)))
+                  for i in range(crashes)]
+        survivors = victims[crashes:] or victims[:1]
+        for _ in range(stalls):
+            events.append(FaultEvent("stall", rng.choice(survivors),
+                                     rng.randrange(1, max(steps, 2)),
+                                     stall_s=stall_s))
+        for _ in range(verify_errors):
+            events.append(FaultEvent("verify_error", rng.choice(survivors),
+                                     rng.randrange(1, max(steps, 2))))
+        return cls(events)
+
+    def take(self, replica: int, step: int) -> List[FaultEvent]:
+        due = self._due.pop((replica, step), [])
+        self.fired.extend(due)
+        return due
+
+    def pending(self) -> int:
+        return sum(len(v) for v in self._due.values())
+
+    def describe(self) -> List[dict]:
+        return [dataclasses.asdict(e) for e in self.events]
 
 
 def resume_plan(monitor: FleetMonitor, chips_per_host: int,

@@ -1,7 +1,7 @@
 """Host<->device dispatch accounting + request-engine counters.
 
 The fused wave program's whole point is eliminating host round-trips
-(DESIGN.md §3 / §8 item 6 resolution), so the benchmark needs a number
+(DESIGN.md §3 / §9 item 6 resolution), so the benchmark needs a number
 to show for it.  ``counting()`` installs a process-local counter; every
 host->device program dispatch and device->host materialization on the
 search path calls :func:`record` with an event tag.  Outside a
@@ -68,6 +68,7 @@ class RequestTrace:
     stream_hit: bool = False
     waves: int = 0                 # waves the request participated in
     deadline: Optional[float] = None
+    status: str = "ok"             # 'ok' | 'shed' (engine-level outcome)
 
     @property
     def latency_s(self) -> float:
@@ -112,16 +113,24 @@ class EngineCounters:
         self.traces.append(trace)
 
     def summary(self, cache_stats: Optional[dict] = None) -> dict:
-        lats = [t.latency_s for t in self.traces]
-        queues = [t.queue_s for t in self.traces]
+        """Deadline accounting rides along (DESIGN.md §6): latency
+        quantiles cover SERVED requests only (a shed request's 'latency'
+        is time-to-shed, not service), while the shed tally and the
+        deadline-met ratio cover every respond."""
+        served = [t for t in self.traces if t.status == "ok"]
+        lats = [t.latency_s for t in served]
+        queues = [t.queue_s for t in served]
         met = [t.deadline_met for t in self.traces
                if t.deadline_met is not None]
         out = {
             "requests": len(self.traces),
+            "served": len(served),
+            "shed": sum(t.status == "shed" for t in self.traces),
             "steps": self.steps,
             "mean_latency_s": sum(lats) / len(lats) if lats else 0.0,
             "p50_latency_s": _quantile(lats, 0.50),
             "p95_latency_s": _quantile(lats, 0.95),
+            "p99_latency_s": _quantile(lats, 0.99),
             "max_latency_s": max(lats) if lats else 0.0,
             "mean_queue_s": sum(queues) / len(queues) if queues else 0.0,
             "mean_queue_depth": (sum(self.queue_depth)
@@ -133,6 +142,7 @@ class EngineCounters:
             "stream_hits": sum(t.stream_hit for t in self.traces),
             "deadlines_met": sum(met),
             "deadlines_missed": len(met) - sum(met),
+            "deadline_met_ratio": (sum(met) / len(met)) if met else 1.0,
         }
         if cache_stats is not None:
             out["stream_cache"] = dict(cache_stats)

@@ -214,7 +214,7 @@ def test_engine_warmup_resets_counters(small_world):
 def test_plan_query_ring_bounded(small_world):
     """Long-lived engines: many admit/respond cycles keep the plan's
     query list bounded (``ExecutionPlan.retire_tiles`` compaction ring,
-    DESIGN.md §8 item 9), qi-indexed engine state follows the remap,
+    DESIGN.md §9 item 9), qi-indexed engine state follows the remap,
     and results stay bit-identical to the one-shot path throughout."""
     coll, sim = small_world
     params = _params()

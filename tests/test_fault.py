@@ -1,0 +1,386 @@
+"""Fault-tolerant serving plane (DESIGN.md §6): the FleetMonitor health
+state machine, the deterministic FaultPlan injector, replica
+quarantine + bounded-retry failover behind the AdmissionRouter
+(served responses stay bit-identical to the fault-free one-shot path;
+no request is lost or duplicated), deadline-aware shedding before any
+wave tile is spent, and the drain loop's idle behavior."""
+import numpy as np
+import pytest
+
+from repro.core import KoiosSearch, SearchParams
+from repro.data import sample_queries
+from repro.runtime import instrument
+from repro.runtime.engine import (AdmissionRouter, RequestEngine,
+                                  RouterPolicy)
+from repro.runtime.fault import (FaultConfig, FaultEvent, FaultPlan,
+                                 FleetMonitor, ReplicaCrash,
+                                 TransientVerifierError)
+
+
+def _params():
+    return SearchParams(k=5, alpha=0.8, chunk_size=64, verify_batch=8)
+
+
+def _fake_clock(tick=0.0):
+    """Virtual clock: (now, advance, sleep, sleep_log).  ``tick`` makes
+    every read advance a hair so step latencies are nonzero (the
+    straggler detector filters zero-latency heartbeats)."""
+    t = [1000.0]
+    log = []
+
+    def now():
+        t[0] += tick
+        return t[0]
+
+    def advance(dt):
+        t[0] += dt
+
+    def sleep(dt):
+        log.append(dt)
+        t[0] += dt
+
+    return now, advance, sleep, log
+
+
+# ------------------------------------------------- FleetMonitor machine
+def test_fleet_monitor_heartbeat_timeout_and_restore():
+    """Heartbeat timeout -> failed; evict -> unhealthy; restore ->
+    healthy with a fresh heartbeat (no instant re-eviction)."""
+    clock, advance, _, _ = _fake_clock()
+    mon = FleetMonitor(3, FaultConfig(heartbeat_timeout=1.0), clock=clock)
+    for h in range(3):
+        mon.heartbeat(h, step=1, step_latency=0.1)
+    advance(0.5)
+    assert mon.failed_hosts() == []
+    mon.heartbeat(0, step=2, step_latency=0.1)
+    mon.heartbeat(2, step=2, step_latency=0.1)
+    advance(0.8)                       # host 1 last beat 1.3s ago
+    assert mon.failed_hosts() == [1]
+    mon.evict([1])
+    assert mon.healthy_count() == 2
+    assert mon.failed_hosts() == []    # unhealthy hosts are not re-flagged
+    mon.restore(1)
+    assert mon.healthy_count() == 3
+    assert mon.failed_hosts() == []    # restore refreshed the heartbeat
+
+
+def test_fleet_monitor_straggler_patience():
+    """A straggler is evicted only after ``patience`` consecutive slow
+    steps, and one fast step resets the count."""
+    clock, _, _, _ = _fake_clock()
+    mon = FleetMonitor(3, FaultConfig(straggler_factor=2.0,
+                                      straggler_patience=2), clock=clock)
+    for h in range(3):
+        mon.heartbeat(h, 1, 0.1)
+    mon.heartbeat(2, 1, 1.0)           # 10x the median
+    assert mon.stragglers() == []      # patience 1 of 2
+    mon.heartbeat(2, 2, 0.1)           # recovered
+    assert mon.stragglers() == []      # count reset
+    mon.heartbeat(2, 3, 1.0)
+    assert mon.stragglers() == []
+    mon.heartbeat(2, 4, 1.0)
+    assert mon.stragglers() == [2]     # two consecutive slow steps
+    mon.evict([2])
+    assert mon.healthy_count() == 2
+
+
+# ------------------------------------------------------ FaultPlan data
+def test_fault_plan_seeded_and_single_fire():
+    a = FaultPlan.random(seed=3, replicas=4, steps=10)
+    b = FaultPlan.random(seed=3, replicas=4, steps=10)
+    c = FaultPlan.random(seed=4, replicas=4, steps=10)
+    assert a.describe() == b.describe()       # same seed, same schedule
+    assert a.describe() != c.describe()
+    assert all(e["kind"] in ("crash", "stall", "verify_error")
+               for e in a.describe())
+
+    ev = FaultEvent("crash", replica=1, step=2)
+    plan = FaultPlan([ev, FaultEvent("stall", 0, 2, stall_s=0.5)])
+    assert plan.pending() == 2
+    assert plan.take(1, 2) == [ev]
+    assert plan.take(1, 2) == []              # fires exactly once
+    assert plan.pending() == 1
+    assert plan.fired == [ev]
+    with pytest.raises(AssertionError):
+        FaultEvent("meteor", 0, 1)
+
+
+# -------------------------------------------------- router failover
+def test_router_crash_failover_bitwise(small_world):
+    """The tentpole guarantee: kill 1 of 4 replicas mid-trace and the
+    router still completes the trace — every served response
+    bit-identical to the fault-free one-shot path, retried requests
+    appear exactly once (no loss, no duplication), and global rid
+    order is preserved."""
+    coll, sim = small_world
+    params = _params()
+    queries = sample_queries(coll, 8, seed=51)
+    ref = KoiosSearch(coll, sim, params, partitions=2).search_batch(queries)
+
+    clock, advance, sleep, _ = _fake_clock()
+    plan = FaultPlan([FaultEvent("crash", replica=1, step=2)])
+    router = AdmissionRouter(coll, sim, params, replicas=4, partitions=2,
+                            fault_plan=plan, clock=clock, sleep=sleep)
+    resp = router.serve(queries)
+
+    assert [r.rid for r in resp] == list(range(len(queries)))  # no loss/dup
+    assert plan.pending() == 0                  # the crash really fired
+    retried = [r for r in resp if r.status == "retried"]
+    assert retried and all(r.retries == 1 for r in retried)
+    assert all(r.status in ("ok", "retried") for r in resp)
+    for r in resp:                              # served == fault-free
+        a = ref[r.rid]
+        assert np.array_equal(r.result.ids, a.ids)
+        assert np.array_equal(r.result.lb, a.lb)
+
+    s = router.summary()
+    assert s["quarantines"] == 1 and s["healthy_replicas"] == 3
+    assert s["retries"] == len(retried) and s["failed"] == 0
+    assert s["requests"] == len(queries)  # traces across the fleet
+
+
+def test_router_all_quarantined_fails_cleanly(small_world):
+    """Satellite: with every replica quarantined the router responds
+    ``status='failed'`` with a reason — never an unhandled KeyError —
+    both for in-flight requests (after the retry budget) and for fresh
+    admissions."""
+    coll, sim = small_world
+    params = _params()
+    queries = sample_queries(coll, 4, seed=52)
+
+    clock, advance, sleep, _ = _fake_clock()
+    plan = FaultPlan([FaultEvent("crash", 0, 1), FaultEvent("crash", 1, 1)])
+    router = AdmissionRouter(coll, sim, params, replicas=2, partitions=2,
+                            policy=RouterPolicy(retry_budget=1),
+                            fault_plan=plan, clock=clock, sleep=sleep)
+    resp = router.serve(queries)
+    assert [r.rid for r in resp] == list(range(len(queries)))
+    assert all(r.status == "failed" and r.reason for r in resp)
+    assert all(len(r.result.ids) == 0 for r in resp)
+    assert router.summary()["healthy_replicas"] == 0
+
+    gid = router.submit(queries[0])             # admission after the fact
+    late = router.drain()
+    assert [r.rid for r in late] == [gid]
+    assert late[0].status == "failed"
+    assert "quarantined" in late[0].reason
+
+
+def test_router_transient_error_quarantines_then_revives(small_world):
+    """A transient verifier error quarantines the replica (its requests
+    fail over, served bit-identically); after the cooldown the replica
+    is revived and serves again."""
+    coll, sim = small_world
+    params = _params()
+    queries = sample_queries(coll, 4, seed=53)
+    ref = KoiosSearch(coll, sim, params, partitions=2).search_batch(queries)
+
+    clock, advance, sleep, _ = _fake_clock()
+    plan = FaultPlan([FaultEvent("verify_error", 0, 1)])
+    router = AdmissionRouter(coll, sim, params, replicas=2, partitions=2,
+                            policy=RouterPolicy(revive_after_s=0.1),
+                            fault_plan=plan, clock=clock, sleep=sleep)
+    resp = router.serve(queries)
+    assert [r.rid for r in resp] == list(range(len(queries)))
+    assert all(r.status in ("ok", "retried") for r in resp)
+    assert any(r.status == "retried" for r in resp)
+    for r in resp:
+        assert np.array_equal(r.result.ids, ref[r.rid].ids)
+        assert np.array_equal(r.result.lb, ref[r.rid].lb)
+
+    advance(0.2)                                # past the cooldown
+    router.step()                               # revive check runs
+    assert router.summary()["healthy_replicas"] == 2
+    again = router.serve(queries)               # the revived replica works
+    assert all(r.status == "ok" for r in again)
+    for r, a in zip(again, ref):                # gids keep counting up —
+        assert np.array_equal(r.result.ids, a.ids)   # compare by position
+    assert sum(1 for q in router.quarantine_log
+               if q["reason"] == "revived") == 1
+
+
+def test_router_hung_step_quarantined(small_world):
+    """A stall longer than the heartbeat timeout is a hang: the replica
+    is quarantined right after the step returns, its requests fail over,
+    and the trace still completes bit-identically."""
+    coll, sim = small_world
+    params = _params()
+    queries = sample_queries(coll, 4, seed=54)
+    ref = KoiosSearch(coll, sim, params, partitions=2).search_batch(queries)
+
+    clock, advance, sleep, _ = _fake_clock(tick=1e-6)
+    plan = FaultPlan([FaultEvent("stall", 0, 1, stall_s=2.0)])
+    router = AdmissionRouter(coll, sim, params, replicas=2, partitions=2,
+                            fault_config=FaultConfig(heartbeat_timeout=0.5),
+                            fault_plan=plan, clock=clock, sleep=sleep)
+    resp = router.serve(queries)
+    assert [r.rid for r in resp] == list(range(len(queries)))
+    assert all(r.status in ("ok", "retried") for r in resp)
+    for r in resp:
+        assert np.array_equal(r.result.ids, ref[r.rid].ids)
+        assert np.array_equal(r.result.lb, ref[r.rid].lb)
+    hung = [q for q in router.quarantine_log if "hung" in q["reason"]]
+    assert len(hung) == 1 and hung[0]["replica"] == 0
+
+
+def test_router_straggler_stalls_quarantined(small_world):
+    """Repeated sub-timeout stalls trip the straggler detector after
+    ``straggler_patience`` steps; the fleet keeps serving."""
+    coll, sim = small_world
+    params = _params()
+    queries = sample_queries(coll, 6, seed=55)
+
+    clock, advance, sleep, _ = _fake_clock(tick=1e-6)
+    plan = FaultPlan([FaultEvent("stall", 0, s, stall_s=0.05)
+                      for s in (1, 2, 3)])
+    router = AdmissionRouter(
+        coll, sim, params, replicas=3, partitions=2,
+        fault_config=FaultConfig(heartbeat_timeout=60.0,
+                                 straggler_factor=3.0,
+                                 straggler_patience=2),
+        fault_plan=plan, clock=clock, sleep=sleep)
+    resp = router.serve(queries)
+    assert [r.rid for r in resp] == list(range(len(queries)))
+    assert all(r.status in ("ok", "retried") for r in resp)
+    strag = [q for q in router.quarantine_log
+             if "straggler" in q["reason"]]
+    assert len(strag) == 1 and strag[0]["replica"] == 0
+
+
+# ----------------------------------------------------- deadline shedding
+def test_engine_sheds_doomed_requests_before_any_wave(small_world):
+    """Acceptance: under tight deadlines the doomed requests respond
+    ``status='shed'`` BEFORE wave dispatch — the instrument event count
+    matches, their traces show zero waves, and the engine's wave sizes
+    account only the served requests' tiles."""
+    coll, sim = small_world
+    params = _params()
+    queries = sample_queries(coll, 4, seed=56)
+    ref = KoiosSearch(coll, sim, params, partitions=2).search_batch(queries)
+
+    clock, advance, sleep, _ = _fake_clock()
+    eng = RequestEngine(coll, sim, params, partitions=2,
+                        shed_deadlines=True, clock=clock, sleep=sleep)
+    now = clock()
+    deadlines = [None, now - 0.001, None, now - 0.5]   # 1 and 3 are doomed
+    with instrument.counting() as c:
+        resp = eng.serve(queries, deadlines=deadlines)
+
+    assert [r.rid for r in resp] == [0, 1, 2, 3]
+    shed = [r for r in resp if r.status == "shed"]
+    assert [r.rid for r in shed] == [1, 3]
+    assert c["engine:shed"] == 2
+    for r in shed:
+        assert r.waves == 0                      # no wave tile spent
+        assert len(r.result.ids) == 0
+        assert r.deadline_met is False
+        assert "deadline unreachable" in r.reason
+    for r in resp:
+        if r.status == "ok":
+            assert np.array_equal(r.result.ids, ref[r.rid].ids)
+            assert np.array_equal(r.result.lb, ref[r.rid].lb)
+    # wave accounting: only the 2 served requests' tiles ever ran
+    assert sum(eng.counters.wave_sizes) == 2 * len(eng.partitions)
+    s = eng.summary()
+    assert s["shed"] == 2 and s["served"] == 2 and s["requests"] == 4
+    assert 0.0 <= s["deadline_met_ratio"] <= 1.0
+    assert s["p99_latency_s"] >= s["p50_latency_s"] >= 0.0
+
+
+def test_engine_sheds_inflight_when_estimate_says_doomed(small_world):
+    """Mid-flight shedding: once the smoothed wave time says the
+    remaining partitions cannot meet the deadline, the request is
+    dropped from the NEXT wave (its spent waves are reported) and the
+    rest of the cohort is unaffected."""
+    coll, sim = small_world
+    params = _params()
+    queries = sample_queries(coll, 2, seed=57)
+    ref = KoiosSearch(coll, sim, params, partitions=4).search_batch(queries)
+
+    clock, advance, sleep, _ = _fake_clock()
+    eng = RequestEngine(coll, sim, params, partitions=4,
+                        shed_deadlines=True, clock=clock, sleep=sleep)
+    eng.submit(queries[0])
+    eng.submit(queries[1], deadline=clock() + 10.0)
+    eng.step()                                   # wave 1 of 4 runs for both
+    eng._wave_ewma = 100.0          # waves are 'measured' slow: 3 waves
+    resp = []                       # to go x 100s each >> 10s of headroom
+    while eng.pending():
+        advance(0.01)
+        resp.extend(eng.step())
+    resp.sort(key=lambda r: r.rid)
+
+    assert [r.status for r in resp] == ["ok", "shed"]
+    assert resp[1].waves == 1                    # one wave was spent...
+    assert "deadline unreachable" in resp[1].reason
+    assert np.array_equal(resp[0].result.ids, ref[0].ids)  # ...cohort fine
+    assert np.array_equal(resp[0].result.lb, ref[0].lb)
+
+
+# ------------------------------------------------------- drain behavior
+def test_drain_sleeps_full_arrival_gap_no_busy_spin(small_world):
+    """Satellite: a known future arrival is slept through in ONE sleep
+    call (the historical path woke every ``max_idle_wait_s`` to
+    re-discover the same gap ~100x/s)."""
+    coll, sim = small_world
+    clock, advance, sleep, log = _fake_clock()
+    eng = RequestEngine(coll, sim, _params(), partitions=1,
+                        clock=clock, sleep=sleep)
+    q = sample_queries(coll, 1, seed=58)
+    eng.submit(q[0], arrival=clock() + 1.0)
+    resp = eng.drain(max_idle_wait_s=0.01)
+    assert len(resp) == 1 and resp[0].status == "ok"
+    arrival_sleeps = [dt for dt in log if dt > 0.01]
+    assert len(arrival_sleeps) == 1              # one sleep covers the gap
+    assert arrival_sleeps[0] == pytest.approx(1.0)
+    assert len(log) <= 2                         # no 100-iteration spin
+
+
+def test_evacuate_hands_back_requests_and_keeps_resources(small_world):
+    """Evacuation empties the lifecycle (no duplicate responds possible)
+    but keeps request-independent resources — the revived replica
+    serves fresh traffic bit-identically, streams still cached."""
+    coll, sim = small_world
+    params = _params()
+    queries = sample_queries(coll, 3, seed=59)
+    ref = KoiosSearch(coll, sim, params, partitions=2).search_batch(queries)
+
+    clock, advance, sleep, _ = _fake_clock()
+    eng = RequestEngine(coll, sim, params, partitions=2,
+                        clock=clock, sleep=sleep)
+    rids = [eng.submit(q) for q in queries]
+    eng.step()                                   # mid-flight
+    done, specs = eng.evacuate()
+    assert done == []
+    assert [s[0] for s in specs] == rids         # every request handed back
+    assert eng.pending() == 0                    # nothing left to respond
+    assert len(eng.stream_cache) >= 1            # cache survives
+
+    resp = eng.serve(queries)                    # revived replica serves
+    for r, a in zip(resp, ref):
+        assert r.status == "ok"
+        assert np.array_equal(r.result.ids, a.ids)
+        assert np.array_equal(r.result.lb, a.lb)
+    assert all(r.stream_hit for r in resp)       # ...from the kept cache
+
+
+def test_engine_crash_and_verify_faults_raise(small_world):
+    """Standalone engines surface injected faults as the typed
+    exceptions the router consumes."""
+    coll, sim = small_world
+    q = sample_queries(coll, 1, seed=60)
+    clock, advance, sleep, _ = _fake_clock()
+    eng = RequestEngine(coll, sim, _params(), partitions=1,
+                        fault_plan=FaultPlan([FaultEvent("crash", 0, 1)]),
+                        clock=clock, sleep=sleep)
+    eng.submit(q[0])
+    with pytest.raises(ReplicaCrash):
+        eng.step()
+
+    eng2 = RequestEngine(
+        coll, sim, _params(), partitions=1,
+        fault_plan=FaultPlan([FaultEvent("verify_error", 0, 1)]),
+        clock=clock, sleep=sleep)
+    eng2.submit(q[0])
+    with pytest.raises(TransientVerifierError):
+        eng2.step()

@@ -20,7 +20,7 @@ def test_kth_largest():
 
 
 def test_paper_iub_counterexample():
-    """The paper's Lemma 6 bound undershoots SO (DESIGN.md §7.5):
+    """The paper's Lemma 6 bound undershoots SO (DESIGN.md §8.5):
     greedy-blocked elements can be re-matched by the optimal matching at
     similarities above s_now."""
     w = np.zeros((3, 3), np.float32)
@@ -71,7 +71,7 @@ def _simulate_stream_bounds(w, alpha):
 @given(st.integers(0, 100_000), st.integers(1, 8), st.integers(1, 8),
        st.sampled_from([0.5, 0.7, 0.8]))
 def test_sound_iub_never_undershoots(seed, nq, nc, alpha):
-    """Property: iUB'(C) >= SO at every stream position (DESIGN.md §7.5),
+    """Property: iUB'(C) >= SO at every stream position (DESIGN.md §8.5),
     and the greedy partial score S <= SO (Lemma 5)."""
     rng = np.random.default_rng(seed)
     w = rng.random((nq, nc)).astype(np.float32)

@@ -103,7 +103,7 @@ def test_fused_with_mesh_exchange_identical(small_world):
 
 @pytest.mark.parametrize("partitions", [2, 4])
 def test_token_balanced_partitioning(small_world, partitions):
-    """Size-balanced (token-count) partitioning (DESIGN.md §8 item 5,
+    """Size-balanced (token-count) partitioning (DESIGN.md §9 item 5,
     resolved): identical top-k to the linspace set-range split, and every
     partition's token count within 10% of the ideal share."""
     coll, sim = small_world

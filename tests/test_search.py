@@ -86,7 +86,7 @@ def test_k_variants(world, default_params):
 
 def test_paper_ub_mode_runs(world, default_params):
     """Reproduction mode (paper's Lemma-6 filter) executes; exactness is NOT
-    asserted because the bound is unsound (DESIGN.md §7.5)."""
+    asserted because the bound is unsound (DESIGN.md §8.5)."""
     coll, sim, index = world
     params = dataclasses.replace(default_params, ub_mode="paper")
     engine = KoiosSearch(coll, sim, params)
