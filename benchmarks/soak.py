@@ -21,7 +21,17 @@ Two legs, both over ONE shared :class:`ShardedCollection` resource:
   trail that no wave tile was spent on them), while the surviving
   requests stay bit-identical.
 
-Both legs merge their records into ``BENCH_soak.json`` (CI uploads it;
+* ``live_update`` — the crash-consistency leg (DESIGN.md §6.5): the
+  first half of the trace is admitted, a replica crashes, and a live
+  ``commit()`` (remove the hot top-1 set + add two) lands mid-flight
+  with a snapshot on commit; the second half is admitted post-commit.
+  Asserted: exactly-once rids; every served response bit-identical to
+  the one-shot reference of ITS epoch (pre-commit admissions pinned to
+  the old snapshot, post-commit ones reflecting the new sets);
+  post-commit responses all on the new epoch; and a restore from the
+  snapshot serving bit-identically to the committed head.
+
+All legs merge their records into ``BENCH_soak.json`` (CI uploads it;
 the trajectory stays comparable across PRs).
 
 Usage:
@@ -31,6 +41,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import tempfile
 import time
 
 import numpy as np
@@ -200,6 +211,126 @@ def run_overload(dataset="opendata", replicas=2, partitions=2,
     }
 
 
+def run_live_update(dataset="opendata", replicas=4, partitions=2,
+                    n_requests=32, pool=10, zipf_a=1.3, k=10, alpha=0.8,
+                    stagger_ms=2.0, seed=7, snapshot_dir=None):
+    """The crash-consistency leg (DESIGN.md §6.5): admit half the trace,
+    crash a replica, land a live ``commit()`` mid-flight (snapshotting on
+    commit), admit the rest, then assert the epoch contract: exactly-once
+    rids; every served response bit-identical to the one-shot reference
+    of ITS epoch; post-commit admissions all on the new epoch; and a
+    restore from the snapshot serving bit-identically to the live head."""
+    assert replicas >= 2 and n_requests >= 8
+    params = SearchParams(k=k, alpha=alpha)
+    coll, sim = world(dataset)
+    sc = ShardedCollection.build(coll, partitions)
+    queries, picks = zipf_trace(coll, n_requests, pool=pool,
+                                zipf_a=zipf_a, seed=seed)
+    half = n_requests // 2
+
+    # epoch-0 one-shot reference over the whole trace
+    ref_old = KoiosSearch(None, sim, params,
+                          collection=sc).search_batch(queries)
+
+    # the update removes the top-1 set of the hottest POST-commit query,
+    # so the new epoch's results provably differ from the old snapshot's
+    hot_pick = int(np.bincount(picks[half:]).argmax())
+    hot_rid = half + int(np.argmax(picks[half:] == hot_pick))
+    victim = int(ref_old[hot_rid].ids[0])
+
+    router = AdmissionRouter(None, sim, params, replicas=replicas,
+                             collection=sc, policy=RouterPolicy())
+    router.warmup(queries[:2])
+    plan = FaultPlan([FaultEvent("crash", replica=1, step=2)])
+    for eng in router.engines:      # one mid-trace replica kill rides
+        eng.fault_plan = plan       # along with the live commit
+        eng._step_no = 0
+
+    tmpdir = snapshot_dir or tempfile.mkdtemp(prefix="koios_soak_snap_")
+    sc.save(tmpdir)                             # epoch-0 baseline
+    sc.on_commit(lambda s: s.save(tmpdir))      # snapshot on every commit
+
+    t0 = time.monotonic()
+    gap = stagger_ms / 1e3
+    with instrument.counting() as events:
+        now = router.clock()
+        for i, q in enumerate(queries[:half]):
+            router.submit(q, arrival=now + i * gap)
+        pre = []                    # step until work is in flight/served
+        while not pre:              # so the commit truly lands mid-trace
+            pre.extend(router.step())
+
+        upd = sc.begin_update()
+        upd.remove_sets([victim])
+        upd.add_sets([coll.get_set(1).copy(), coll.get_set(3).copy()])
+        new_epoch = upd.commit()
+
+        now = router.clock()
+        for i, q in enumerate(queries[half:]):
+            router.submit(q, arrival=now + i * gap)
+        responses = sorted(pre + router.drain(), key=lambda r: r.rid)
+    wall_s = time.monotonic() - t0
+
+    # ---- the epoch contract ----
+    rids = [r.rid for r in responses]
+    assert rids == list(range(n_requests)), \
+        f"lost/duplicated requests: {len(rids)} responses"   # exactly once
+    assert new_epoch > 0 and sc.epoch == new_epoch
+
+    # post-commit one-shot reference (head epoch)
+    ref_new = KoiosSearch(None, sim, params,
+                          collection=sc).search_batch(queries)
+    served = [r for r in responses if r.served]
+    for r in served:        # bit-identical to the reference of ITS epoch
+        ref = ref_old if r.epoch == 0 else ref_new
+        assert result_hash([r.result]) == result_hash([ref[r.rid]]), \
+            f"request {r.rid} (epoch {r.epoch}) diverged"
+    post = [r for r in served if r.rid >= half]
+    assert post and all(r.epoch == new_epoch for r in post), \
+        "a post-commit admission served against a stale epoch"
+    assert not np.array_equal(ref_old[hot_rid].ids, ref_new[hot_rid].ids), \
+        "the commit changed nothing the post-commit trace can observe"
+    assert any(e.kind == "crash" for e in plan.fired), "crash never fired"
+
+    # restore from the snapshot left by the commit hook: same epoch,
+    # bit-identical one-shot serving vs the live committed head
+    restored = ShardedCollection.restore(tmpdir)
+    assert restored is not None and restored.epoch == new_epoch
+    ref_restored = KoiosSearch(None, sim, params,
+                               collection=restored).search_batch(queries)
+    assert (result_hash(ref_restored) == result_hash(ref_new)), \
+        "restore-from-snapshot diverged from the committed head"
+
+    s = router.summary()
+    lats = sorted(r.latency_s for r in served)
+    qtile = lambda q: lats[min(len(lats) - 1,          # noqa: E731
+                               int(q * len(lats)))] if lats else 0.0
+    pre_served = [r for r in served if r.epoch == 0]
+    post_served = [r for r in served if r.epoch != 0]
+    return {
+        "dataset": dataset, "replicas": replicas, "partitions": partitions,
+        "requests": n_requests, "query_pool": pool, "zipf_a": zipf_a,
+        "epoch": int(sc.epoch), "removed_set": victim, "added_sets": 2,
+        "commit_shared_shards": sc._last_commit["shards_shared"],
+        "commit_rebuilt_shards": sc._last_commit["shards_rebuilt"],
+        "served": len(served),
+        "served_old_epoch": len(pre_served),
+        "served_new_epoch": len(post_served),
+        "retries": s["retries"], "shed": s["shed"], "failed": s["failed"],
+        "quarantines": s["quarantines"],
+        "resyncs": int(events.get("engine:resync", 0)),
+        "rollouts": int(events.get("router:rollout", 0)),
+        "commits": int(events.get("collection:commit", 0)),
+        "p50_latency_s": qtile(0.50), "p99_latency_s": qtile(0.99),
+        "served_hash": result_hash([r.result for r in served]),
+        "reference_hash": result_hash(
+            [(ref_old if r.epoch == 0 else ref_new)[r.rid] for r in served]),
+        "restored_hash_matches": True,
+        "snapshot_dir": tmpdir,
+        "wall_s": wall_s,
+    }
+
+
 def write_bench_json(record: dict, path: str, mode: str) -> None:
     """BENCH_soak.json — same merge-under-``records[mode]`` layout as
     the response-time artifact, so every leg's trajectory stays
@@ -249,6 +380,20 @@ def main(argv=None):
     print(f"overload,{o['requests']},{o['p50_latency_s']:.4f},"
           f"{o['p99_latency_s']:.4f},{o['shed_rate']:.2f},0,0,-,True")
     write_bench_json(o, args.json, "overload")
+
+    u = run_live_update(args.dataset, replicas=args.replicas,
+                        partitions=args.partitions,
+                        n_requests=max(2 * (n // 3), 16))
+    ok = u["served_hash"] == u["reference_hash"]
+    print(f"live_update,{u['requests']},{u['p50_latency_s']:.4f},"
+          f"{u['p99_latency_s']:.4f},0.00,{u['retries']},"
+          f"{u['quarantines']},-,{ok}")
+    print(f"[live_update] epoch={u['epoch']} "
+          f"shards shared={u['commit_shared_shards']} "
+          f"rebuilt={u['commit_rebuilt_shards']} "
+          f"served old/new={u['served_old_epoch']}/{u['served_new_epoch']} "
+          f"resyncs={u['resyncs']} restored_ok={u['restored_hash_matches']}")
+    write_bench_json(u, args.json, "live_update")
     return 0
 
 

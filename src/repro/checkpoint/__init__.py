@@ -1,4 +1,6 @@
 from .checkpoint import AsyncSaver, restore, save
+from .collection import CollectionSnapshotter, SnapshotCorruptionError
 from .manager import CheckpointManager
 
-__all__ = ["save", "restore", "AsyncSaver", "CheckpointManager"]
+__all__ = ["save", "restore", "AsyncSaver", "CheckpointManager",
+           "CollectionSnapshotter", "SnapshotCorruptionError"]

@@ -1,0 +1,209 @@
+"""Crash-consistent collection snapshots: per-shard payloads + an atomic
+epoch manifest.
+
+The live-update plane (DESIGN.md §6.5) makes the repository mutable; this
+module makes it durable.  A snapshot is
+
+  ``shard_<sha16>.msgpack``   one content-addressed payload per distinct
+                              shard body: {set_indptr, set_tokens,
+                              vocab_size}, written through
+                              :func:`repro.checkpoint.save` (itself
+                              mkstemp + ``os.replace``, so a payload file
+                              is whole or absent).  The address is a
+                              sha256 over the CSR bytes + vocab —
+                              deliberately EXCLUDING the global id offset,
+                              so a copy-on-write-shared shard whose offset
+                              shifted across a commit dedupes to the same
+                              file, and consecutive snapshots rewrite only
+                              rebuilt shards.
+  ``MANIFEST.json``           the epoch commit point: epoch number, global
+                              geometry, and the ordered shard list
+                              (payload file, sha, id_offset, set count).
+
+Ordering is the crash-consistency argument: payloads first, manifest LAST
+via write-temp-then-``os.replace`` (atomic on POSIX).  A crash before the
+rename leaves the previous manifest intact (restore sees the OLD epoch;
+orphan payloads are garbage, collected on the next save); a crash after
+leaves the new manifest referencing fully-written payloads (restore sees
+the NEW epoch).  There is no interleaving that yields a torn mix —
+tests/test_collection_epoch.py simulates the mid-commit crash and asserts
+old-or-new, and corrupts a payload on disk to assert the sha check turns
+silent corruption into :class:`SnapshotCorruptionError`.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from typing import Optional
+
+import numpy as np
+
+from .checkpoint import restore as _restore_tree
+from .checkpoint import save as _save_tree
+
+MANIFEST = "MANIFEST.json"
+_FORMAT = "koios-collection-v1"
+
+
+class SnapshotCorruptionError(RuntimeError):
+    """A snapshot payload failed its content-hash check on restore."""
+
+
+def _shard_sha(set_indptr: np.ndarray, set_tokens: np.ndarray,
+               vocab_size: int) -> str:
+    h = hashlib.sha256()
+    h.update(np.ascontiguousarray(set_indptr, np.int64).tobytes())
+    h.update(np.ascontiguousarray(set_tokens, np.int32).tobytes())
+    h.update(str(int(vocab_size)).encode())
+    return h.hexdigest()
+
+
+class CollectionSnapshotter:
+    """Save/restore a :class:`~repro.runtime.collection.ShardedCollection`
+    head epoch under one directory, crash-consistently."""
+
+    def __init__(self, directory: str):
+        self.directory = str(directory)
+
+    # ------------------------------------------------------------- save
+    def save(self, collection) -> dict:
+        """Snapshot the head epoch: payloads, then the manifest
+        (atomic), then GC of unreferenced payloads.  Returns the
+        manifest written."""
+        head = collection.head
+        manifest = self._write_payloads(head)
+        self._install_manifest(manifest)
+        self._gc(manifest)
+        return manifest
+
+    def _write_payloads(self, head) -> dict:
+        """Write every shard payload (content-addressed; skipped when the
+        file already exists) and return the manifest that references
+        them.  Split from :meth:`_install_manifest` so tests can crash
+        the process between the two phases."""
+        os.makedirs(self.directory, exist_ok=True)
+        shards = []
+        for s in head.shards:
+            c = s.coll
+            sha = _shard_sha(c.set_indptr, c.set_tokens, c.vocab_size)
+            fname = f"shard_{sha[:16]}.msgpack"
+            path = os.path.join(self.directory, fname)
+            if not os.path.exists(path):
+                _save_tree(path, {
+                    "set_indptr": np.asarray(c.set_indptr, np.int64),
+                    "set_tokens": np.asarray(c.set_tokens, np.int32),
+                    "vocab_size": int(c.vocab_size),
+                })
+            shards.append({"file": fname, "sha": sha,
+                           "id_offset": int(s.id_offset),
+                           "sets": int(c.num_sets)})
+        return {
+            "format": _FORMAT,
+            "epoch": int(head.epoch),
+            "vocab_size": int(head.coll.vocab_size),
+            "num_sets": int(head.coll.num_sets),
+            "shards": shards,
+        }
+
+    def _install_manifest(self, manifest: dict) -> None:
+        """The commit point: temp file + ``os.replace`` onto MANIFEST.
+        Everything before this is invisible to restore; everything after
+        is fully referenced."""
+        fd, tmp = tempfile.mkstemp(dir=self.directory,
+                                   prefix=".manifest.", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(manifest, f, indent=1, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, os.path.join(self.directory, MANIFEST))
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def _gc(self, manifest: dict) -> None:
+        """Drop payload files the installed manifest no longer references
+        (retired epochs' rebuilt shards, crashed saves' orphans)."""
+        live = {s["file"] for s in manifest["shards"]}
+        for name in os.listdir(self.directory):
+            if (name.startswith("shard_") and name.endswith(".msgpack")
+                    and name not in live):
+                try:
+                    os.unlink(os.path.join(self.directory, name))
+                except OSError:
+                    pass
+
+    # ---------------------------------------------------------- restore
+    def restore(self, devices=None):
+        """Rebuild the snapshotted collection (same shard split, same
+        epoch number) or ``None`` when no manifest exists.  Every payload
+        is re-hashed against its manifest sha — bit-level corruption
+        raises :class:`SnapshotCorruptionError` rather than serving wrong
+        top-k.  ``devices`` re-places shards like ``build`` (placement is
+        host policy, not snapshot state)."""
+        from ..core.inverted_index import InvertedIndex
+        from ..core.types import SetCollection
+        from ..runtime.collection import Shard, ShardedCollection
+
+        mpath = os.path.join(self.directory, MANIFEST)
+        if not os.path.exists(mpath):
+            return None
+        with open(mpath) as f:
+            manifest = json.load(f)
+        if manifest.get("format") != _FORMAT:
+            raise SnapshotCorruptionError(
+                f"unknown snapshot format {manifest.get('format')!r}")
+        if devices == "auto":
+            import jax
+
+            devices = jax.devices()
+        shards = []
+        colls = []
+        for sid, entry in enumerate(manifest["shards"]):
+            path = os.path.join(self.directory, entry["file"])
+            if not os.path.exists(path):
+                raise SnapshotCorruptionError(
+                    f"manifest references missing payload {entry['file']}")
+            tree = _restore_tree(path)
+            c = SetCollection(
+                set_indptr=np.asarray(tree["set_indptr"], np.int64),
+                set_tokens=np.asarray(tree["set_tokens"], np.int32),
+                vocab_size=int(tree["vocab_size"]))
+            sha = _shard_sha(c.set_indptr, c.set_tokens, c.vocab_size)
+            if sha != entry["sha"]:
+                raise SnapshotCorruptionError(
+                    f"payload {entry['file']} content hash mismatch "
+                    f"(snapshot corrupted)")
+            if c.num_sets != entry["sets"]:
+                raise SnapshotCorruptionError(
+                    f"payload {entry['file']} set count "
+                    f"{c.num_sets} != manifest {entry['sets']}")
+            dev = devices[sid % len(devices)] if devices else None
+            shards.append(Shard(
+                coll=c, inv=InvertedIndex.build(c),
+                id_offset=int(entry["id_offset"]), sid=sid, device=dev))
+            colls.append(c)
+        total = sum(c.num_sets for c in colls)
+        if total != manifest["num_sets"]:
+            raise SnapshotCorruptionError(
+                f"restored set count {total} != manifest "
+                f"{manifest['num_sets']}")
+        indptr = [np.zeros(1, np.int64)]
+        tokens = []
+        base = 0
+        for c in colls:
+            indptr.append(c.set_indptr[1:] + base)
+            tokens.append(c.set_tokens)
+            base += c.total_tokens
+        coll = SetCollection(
+            set_indptr=np.concatenate(indptr),
+            set_tokens=(np.concatenate(tokens) if tokens
+                        else np.zeros(0, np.int32)),
+            vocab_size=int(manifest["vocab_size"]))
+        return ShardedCollection(coll, shards,
+                                 epoch=int(manifest["epoch"]))

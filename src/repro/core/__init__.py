@@ -6,7 +6,8 @@ Public API:
     KoiosSearch, KoiosIndex                     (search engine)
     baseline_topk, baseline_plus_topk, brute_force_topk (paper baselines)
 """
-from .types import SetCollection, SearchParams, SearchResult, SearchStats
+from .types import (SetCollection, SearchParams, SearchResult,
+                    SearchStats, QueryValidationError, validate_query)
 from .similarity import EmbeddingSimilarity, NGramJaccardSimilarity
 from .inverted_index import InvertedIndex
 from .token_stream import (TokenStreamCache, build_token_stream,
@@ -21,6 +22,7 @@ from .baseline import baseline_topk, baseline_plus_topk, brute_force_topk
 
 __all__ = [
     "SetCollection", "SearchParams", "SearchResult", "SearchStats",
+    "QueryValidationError", "validate_query",
     "EmbeddingSimilarity", "NGramJaccardSimilarity", "InvertedIndex",
     "TokenStreamCache", "build_token_stream", "build_token_stream_batch",
     "build_token_stream_batch_cached", "expand_to_events",

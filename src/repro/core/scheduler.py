@@ -126,11 +126,16 @@ class ExecutionPlan:
     def __init__(self, indexes: Sequence, queries: Sequence[np.ndarray],
                  pool_coll: SetCollection,
                  theta0: Optional[Sequence[float]] = None,
-                 request_id_bases: Optional[Sequence[int]] = None):
+                 request_id_bases: Optional[Sequence[int]] = None,
+                 epoch: int = 0):
         # a ShardedCollection resource is a valid tile source: its shards
         # ARE the plan's per-partition indexes (borrowed, never copied)
         if hasattr(indexes, "shards"):
             indexes = indexes.shards
+        # audit tag (DESIGN.md §6.5): the collection epoch this plan's
+        # tiles compute against — a plan NEVER migrates epochs; engines
+        # rebuild the plan on resync
+        self.epoch = int(epoch)
         self.indexes = list(indexes)
         self.queries = [np.asarray(q, dtype=np.int32) for q in queries]
         self.pool_coll = pool_coll

@@ -28,7 +28,8 @@ import numpy as np
 
 from .inverted_index import InvertedIndex
 from .scheduler import ExecutionPlan, SchedulerStats, run_plan
-from .types import SearchParams, SearchResult, SearchStats, SetCollection
+from .types import (SearchParams, SearchResult, SearchStats, SetCollection,
+                    validate_query)
 
 
 @dataclasses.dataclass
@@ -288,13 +289,22 @@ class KoiosSearch:
             collection = ShardedCollection.build(coll, partitions,
                                                  by=partition_by)
         self.collection = collection
-        self.coll = collection.coll
         self.schedule = schedule
         self.bound_exchange = bound_exchange
         self.mesh = mesh
         self.stream_cache = stream_cache
         self.scheduler_stats: Optional[SchedulerStats] = None
-        self.partitions = collection.shards
+
+    # head-epoch delegation (DESIGN.md §6.5): a one-shot search always
+    # sees the latest committed repository; each search_batch call pins
+    # the head for its own duration so a concurrent commit cannot tear it
+    @property
+    def coll(self) -> SetCollection:
+        return self.collection.coll
+
+    @property
+    def partitions(self):
+        return self.collection.shards
 
     def search(self, query: np.ndarray, k: Optional[int] = None,
                schedule: Optional[str] = None) -> SearchResult:
@@ -315,21 +325,31 @@ class KoiosSearch:
         """
         params = self.params if k is None else dataclasses.replace(
             self.params, k=k)
-        queries = [np.asarray(q, dtype=np.int32) for q in queries]
+        queries = [validate_query(q, self.sim) for q in queries]
         if not queries:
             return []
-        streams = None
-        if self.stream_cache is not None:
-            from .token_stream import build_token_stream_batch_cached
-            streams = build_token_stream_batch_cached(
-                queries, self.sim, params.alpha, self.stream_cache,
-                use_kernel=params.stream_use_kernel)
-        plan = ExecutionPlan(self.partitions, queries, pool_coll=self.coll)
-        per_query = run_plan(plan, self.sim, params,
-                             schedule=schedule or self.schedule,
-                             bound_exchange=self.bound_exchange,
-                             mesh=self.mesh, streams=streams)
-        self.scheduler_stats = plan.stats
+        # pin the head epoch for the call: the whole plan computes
+        # against one consistent snapshot even if a live-update commit
+        # lands mid-search (the one-shot counterpart of the engine's
+        # admission pinning, DESIGN.md §6.5)
+        epoch = self.collection.pin()
+        try:
+            streams = None
+            if self.stream_cache is not None:
+                from .token_stream import build_token_stream_batch_cached
+                self.stream_cache.set_epoch(epoch.epoch)
+                streams = build_token_stream_batch_cached(
+                    queries, self.sim, params.alpha, self.stream_cache,
+                    use_kernel=params.stream_use_kernel)
+            plan = ExecutionPlan(epoch.shards, queries,
+                                 pool_coll=epoch.coll, epoch=epoch.epoch)
+            per_query = run_plan(plan, self.sim, params,
+                                 schedule=schedule or self.schedule,
+                                 bound_exchange=self.bound_exchange,
+                                 mesh=self.mesh, streams=streams)
+            self.scheduler_stats = plan.stats
+        finally:
+            self.collection.release(epoch)
         # ONE device dispatch merges every query's per-shard top-k lists
         # through the log-depth reduction tree (bit-identical to the
         # historical host concatenation merge — see merge_topk_batch)

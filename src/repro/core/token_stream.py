@@ -251,7 +251,8 @@ def build_token_stream_batch(queries, sim_provider, alpha: float,
 
 
 class TokenStreamCache:
-    """LRU cache of token streams keyed by (query tokens, alpha, provider).
+    """Byte-bounded LRU cache of token streams keyed by (query tokens,
+    alpha, provider, collection epoch).
 
     Streams are pure functions of the key (module docstring), and
     :class:`TokenStream` is frozen with arrays no consumer mutates, so a
@@ -263,14 +264,31 @@ class TokenStreamCache:
     would serve stale streams — providers are immutable by convention
     everywhere else in the repo.
 
+    The bound is BYTES, not entries (``max_bytes``): streams vary ~100x
+    in footprint with query size x alpha (a permissive alpha on a large
+    query yields a long (q_pos, token, sim) tuple list), so an entry
+    count bounds nothing — a byte budget is what actually caps host
+    memory.  Entries larger than the whole budget are not cached at all
+    (they would only evict everything else and then miss next time).
+
+    The key carries the serving layer's collection EPOCH (DESIGN.md
+    §6.5).  Streams do not read the collection — but the entries
+    belong to an engine whose refinement/verification state is epoch-
+    pinned, and keying by epoch makes "a commit cannot serve stale
+    state" a cache invariant rather than a per-caller audit: after
+    ``set_epoch`` bumps, every old-epoch entry is unreachable (and
+    drains off the LRU cold end under the byte budget).
+
     ``hits``/``misses``/``evictions`` are cumulative; the request
     engine surfaces them per serving window via
     ``runtime.instrument.EngineCounters``.
     """
 
-    def __init__(self, capacity: int = 512):
-        assert capacity >= 1
-        self.capacity = int(capacity)
+    def __init__(self, max_bytes: int = 64 << 20):
+        assert max_bytes >= 1
+        self.max_bytes = int(max_bytes)
+        self.bytes = 0                   # current cached payload bytes
+        self.epoch = 0                   # collection epoch key component
         self._entries: "OrderedDict[tuple, TokenStream]" = OrderedDict()
         # pin each keyed provider so its id cannot be recycled by the
         # allocator while entries keyed on it may still be alive (a
@@ -280,10 +298,21 @@ class TokenStreamCache:
         self.misses = 0
         self.evictions = 0
 
+    def set_epoch(self, epoch: int) -> None:
+        """Bump the epoch key component (engine resync): entries of
+        older epochs become unreachable immediately and age off the LRU
+        cold end under the byte budget."""
+        self.epoch = int(epoch)
+
+    @staticmethod
+    def _nbytes(stream: TokenStream) -> int:
+        return (stream.q_pos.nbytes + stream.token.nbytes
+                + stream.sim.nbytes)
+
     def key(self, query: np.ndarray, alpha: float, sim_provider) -> tuple:
         q = np.ascontiguousarray(np.asarray(query, np.int32))
         self._providers[id(sim_provider)] = sim_provider
-        return (q.tobytes(), float(alpha), id(sim_provider))
+        return (q.tobytes(), float(alpha), id(sim_provider), self.epoch)
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -304,18 +333,31 @@ class TokenStreamCache:
         return stream
 
     def put(self, key: tuple, stream: TokenStream) -> None:
+        n = self._nbytes(stream)
+        if n > self.max_bytes:
+            return                        # would evict the whole cache
+        prev = self._entries.pop(key, None)
+        if prev is not None:
+            self.bytes -= self._nbytes(prev)
         self._entries[key] = stream
-        self._entries.move_to_end(key)
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
+        self.bytes += n
+        while self.bytes > self.max_bytes and self._entries:
+            _, old = self._entries.popitem(last=False)
+            self.bytes -= self._nbytes(old)
             self.evictions += 1
 
     def stats(self) -> dict:
         lookups = self.hits + self.misses
-        return {"size": len(self._entries), "capacity": self.capacity,
+        return {"size": len(self._entries), "bytes": self.bytes,
+                "max_bytes": self.max_bytes, "epoch": self.epoch,
                 "hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions,
                 "hit_rate": self.hits / lookups if lookups else 0.0}
+
+    def describe(self) -> dict:
+        """Size-accounting summary (alias of :meth:`stats` — the serving
+        observability surface)."""
+        return self.stats()
 
 
 def build_token_stream_batch_cached(queries, sim_provider, alpha: float,

@@ -57,6 +57,61 @@ def pad_ids_pow2(ids: np.ndarray, lo: int = 8) -> np.ndarray:
     return np.concatenate([ids, np.zeros(pad, ids.dtype)])
 
 
+class QueryValidationError(ValueError):
+    """A query failed admission-time validation (empty, malformed, or
+    backed by non-finite embedding rows) — raised/reported BEFORE any
+    search work, never silently producing a garbage top-k."""
+
+
+def validate_query(query, sim_provider=None) -> np.ndarray:
+    """Validate one query token set at admission time; returns it as a
+    contiguous int32 array.
+
+    Structural checks: 1-D, non-empty, integer dtype, no negative ids.
+    Out-of-vocabulary ids (>= vocab) are LEGAL — the identity-pair rule
+    clamps an OOV token's self-similarity to 1.0, so unseen tokens are a
+    supported query feature, not an error.  When ``sim_provider`` exposes
+    an embedding ``table``, the IN-vocab rows the query touches are
+    checked finite: a NaN/Inf embedding row would poison every similarity
+    the token participates in (and through theta_lb, potentially the
+    whole batch's pruning), so it is rejected here with a typed error
+    instead of surfacing as a wrong result."""
+    q = np.asarray(query)
+    if q.ndim != 1:
+        raise QueryValidationError(
+            f"query must be a 1-D token array, got shape {q.shape}")
+    if q.size == 0:
+        raise QueryValidationError("query set is empty")
+    if not np.issubdtype(q.dtype, np.integer):
+        raise QueryValidationError(
+            f"query tokens must be integers, got dtype {q.dtype}")
+    if int(q.min()) < 0:
+        raise QueryValidationError(
+            f"query contains negative token id {int(q.min())}")
+    table = getattr(sim_provider, "table", None)
+    if table is not None:
+        # per-row finiteness, computed ONCE per provider on the host and
+        # cached there: a per-query device gather would compile a fresh
+        # XLA executable for every distinct query length (an unbounded
+        # compile stream on the admission path — each submit is O(|q|)
+        # host indexing instead)
+        finite = getattr(sim_provider, "_finite_rows", None)
+        if finite is None:
+            finite = np.isfinite(np.asarray(table)).all(axis=1)
+            try:
+                sim_provider._finite_rows = finite
+            except AttributeError:
+                pass                       # unwritable provider: recompute
+        vocab = int(table.shape[0])
+        in_vocab = np.unique(q[q < vocab]).astype(np.int64)
+        if len(in_vocab) and not finite[in_vocab].all():
+            bad = in_vocab[~finite[in_vocab]]
+            raise QueryValidationError(
+                f"non-finite embedding row(s) for query token(s) "
+                f"{bad[:4].tolist()}")
+    return np.ascontiguousarray(q, np.int32)
+
+
 @dataclasses.dataclass(frozen=True)
 class SetCollection:
     """Repository of sets in CSR layout.

@@ -16,12 +16,25 @@ the fault-tolerant serving plane (DESIGN.md §6): per-request deadlines
 with deadline-aware shedding, and the summary reports p50/p99 latency,
 deadline-met ratio, and shed/retry/failed accounting.
 
+Crash consistency (DESIGN.md §6.5): ``--snapshot-dir`` restores the
+collection from the latest epoch manifest on startup (falling back to a
+fresh build, snapshotted immediately) and re-snapshots on every live-
+update commit; ``--update-after N`` applies a deterministic live update
+(remove set 0, add two copied sets) once N requests have been served;
+``--kill-after-update`` exits with code 17 right after the commit+
+snapshot (the CI restart-recovery job's crash point); ``--skip N``
+resumes the request trace at global request N after a restart.  The
+``served_hash`` printed at the end is the restart-parity check: a run
+killed after the update and a restored run serving the remaining trace
+hash to exactly the uninterrupted run's pre/post-update hashes.
+
 Smoke scale:
     PYTHONPATH=src python -m repro.launch.serve --requests 4 --k 5
 """
 from __future__ import annotations
 
 import argparse
+import hashlib
 import time
 
 import numpy as np
@@ -49,6 +62,29 @@ def _response_dict(r) -> dict:
     }
 
 
+def _served_hash(results) -> str:
+    """Order-sensitive digest of the SERVED responses (ids + scores) —
+    the restart-recovery parity check: equal hashes mean bit-identical
+    served results, whatever process lifetimes produced them."""
+    h = hashlib.sha256()
+    for r in results:
+        if r.get("status", "ok") in ("ok", "retried"):
+            h.update(np.asarray(r["ids"], np.int64).tobytes())
+            h.update(np.asarray(r["scores"], np.float64).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _demo_update(collection, base_coll) -> int:
+    """The deterministic live update of ``--update-after``: remove set 0,
+    add copies of base sets 1 and 2.  Pure function of the BASE corpus,
+    so an interrupted run and its restored successor commit the same
+    epoch-1 repository bit-for-bit."""
+    u = collection.begin_update()
+    u.remove_sets([0])
+    u.add_sets([base_coll.get_set(1).copy(), base_coll.get_set(2).copy()])
+    return u.commit()
+
+
 class SearchServer:
     """Request-engine serving with a one-shot per-query baseline.
 
@@ -67,15 +103,20 @@ class SearchServer:
 
     def __init__(self, coll, sim, params: SearchParams, partitions: int,
                  schedule: str = "overlap", bound_exchange=None, mesh=None,
-                 stream_cache_capacity: int = 512, replicas: int = 1,
+                 stream_cache_bytes: int = 64 << 20, replicas: int = 1,
                  shards: int = 0, place: bool = False,
-                 shed_deadlines: bool = False, fault_plan=None):
+                 shed_deadlines: bool = False, fault_plan=None,
+                 collection=None):
         from ..runtime.collection import ShardedCollection
         from ..runtime.engine import AdmissionRouter
 
-        self.collection = ShardedCollection.build(
-            coll, shards or partitions,
-            devices="auto" if place else None)
+        # collection= injects a pre-existing resource — the restart path
+        # restores one from a --snapshot-dir manifest instead of building
+        if collection is None:
+            collection = ShardedCollection.build(
+                coll, shards or partitions,
+                devices="auto" if place else None)
+        self.collection = collection
         self.one_shot = KoiosSearch(None, sim, params,
                                     schedule=schedule,
                                     bound_exchange=bound_exchange,
@@ -83,7 +124,7 @@ class SearchServer:
         engine_kwargs = dict(
             schedule="fused" if schedule == "fused" else "wave",
             bound_exchange=bound_exchange, mesh=mesh,
-            stream_cache_capacity=stream_cache_capacity,
+            stream_cache_bytes=stream_cache_bytes,
             shed_deadlines=shed_deadlines)
         if fault_plan is not None and replicas > 1:
             engine_kwargs["fault_plan"] = fault_plan
@@ -166,6 +207,23 @@ def main(argv=None):
     ap.add_argument("--mesh-bounds", action="store_true",
                     help="run the theta_lb exchange as an all-reduce-max "
                          "over a device mesh (DESIGN.md §5)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="crash consistency (DESIGN.md §6.5): restore the "
+                         "collection from this directory's epoch manifest "
+                         "on startup (build fresh + snapshot when none "
+                         "exists) and re-snapshot on every live-update "
+                         "commit")
+    ap.add_argument("--update-after", type=int, default=0,
+                    help="apply the deterministic demo live update "
+                         "(remove set 0, add two copied sets) once this "
+                         "many requests have been served; 0 = never")
+    ap.add_argument("--kill-after-update", action="store_true",
+                    help="exit with code 17 immediately after the "
+                         "--update-after commit (and its snapshot) — the "
+                         "restart-recovery smoke's crash point")
+    ap.add_argument("--skip", type=int, default=0,
+                    help="skip the first N requests of the trace, keeping "
+                         "global request numbering (restart resume)")
     args = ap.parse_args(argv)
 
     bound_exchange = None
@@ -186,11 +244,27 @@ def main(argv=None):
     params = SearchParams(k=args.k, alpha=args.alpha, fused=fused_mode)
     schedule = ("sequential" if args.sequential
                 else "fused" if args.fused else "overlap")
+    collection = None
+    if args.snapshot_dir:
+        from ..runtime.collection import ShardedCollection
+        collection = ShardedCollection.restore(
+            args.snapshot_dir, devices="auto" if args.place else None)
+        if collection is not None:
+            print(f"[serve] restored collection epoch "
+                  f"{collection.epoch} from {args.snapshot_dir}")
     server = SearchServer(coll, sim, params, args.partitions,
                           schedule=schedule,
                           bound_exchange=bound_exchange, mesh=mesh,
                           replicas=args.replicas, shards=args.shards,
-                          place=args.place, shed_deadlines=args.shed)
+                          place=args.place, shed_deadlines=args.shed,
+                          collection=collection)
+    if args.snapshot_dir:
+        if collection is None:
+            # nothing to restore: persist the initial epoch NOW, so a
+            # crash before the first commit still restores epoch 0
+            server.collection.save(args.snapshot_dir)
+        server.collection.on_commit(
+            lambda sc: sc.save(args.snapshot_dir))
     desc = server.collection.describe()
     placed = [s["device"] for s in desc["shards"] if s["device"]]
     print(f"[serve] corpus: {coll.num_sets} sets, vocab {coll.vocab_size}, "
@@ -198,9 +272,15 @@ def main(argv=None):
           + (f" on {len(set(placed))} devices" if placed else "")
           + (f", {args.replicas} replicas" if args.replicas > 1 else ""))
 
+    # queries ALWAYS sample from the pristine built corpus — never the
+    # restored collection — so an interrupted run and its restored
+    # successor replay the identical request trace (restart parity)
     queries = sample_queries(coll, args.requests, seed=1)
     dl = args.deadline_ms / 1e3 if args.deadline_ms else None
-    for lo in range(0, len(queries), args.batch_size):
+    served_pre: list = []           # responses before the live update
+    served_post: list = []          # responses at/after it
+    updated = server.collection.epoch > 0      # restored past the update
+    for lo in range(args.skip, len(queries), args.batch_size):
         batch = queries[lo:lo + args.batch_size]
         if args.stagger_ms and not args.per_query:
             now = server.engine.clock()
@@ -217,6 +297,7 @@ def main(argv=None):
             results = server.serve_batch(
                 batch, batched=not args.per_query,
                 deadlines=[now + dl] * len(batch) if dl else None)
+        (served_post if updated else served_pre).extend(results)
         for i, r in enumerate(results):
             if not args.per_query and r["status"] in ("shed", "failed"):
                 print(f"req {lo+i}: {r['status']} ({r['reason']}) "
@@ -230,6 +311,30 @@ def main(argv=None):
                   f"scores={[round(s,2) for s in r['scores'][:5]]} "
                   f"lat={r['latency_s']}s {extra}"
                   f"verified={r['stats']['exact_matches']}")
+        if (args.update_after and not updated
+                and lo + len(batch) - args.skip >= args.update_after):
+            epoch = _demo_update(server.collection, coll)
+            updated = True
+            print(f"[serve] live update committed: epoch {epoch} "
+                  f"({server.collection.coll.num_sets} sets)"
+                  + (f", snapshotted to {args.snapshot_dir}"
+                     if args.snapshot_dir else ""))
+            if args.kill_after_update:
+                print(f"[serve] served_hash={_served_hash(served_pre)} "
+                      f"requests={len(served_pre)} epoch=0")
+                print("[serve] killed after update (exit 17)")
+                return 17
+    if not args.per_query:
+        if served_pre:
+            print(f"[serve] pre_update_hash={_served_hash(served_pre)} "
+                  f"requests={len(served_pre)}")
+        if served_post:
+            print(f"[serve] post_update_hash={_served_hash(served_post)} "
+                  f"requests={len(served_post)}")
+        print(f"[serve] served_hash="
+              f"{_served_hash(served_pre + served_post)} "
+              f"requests={len(served_pre) + len(served_post)} "
+              f"epoch={server.collection.epoch}")
     if not args.per_query:
         s = server.engine.summary()
         replicas = s.get("per_replica", [s])

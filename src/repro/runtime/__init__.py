@@ -7,7 +7,8 @@ __all__ = ["param_pspecs", "opt_state_pspecs", "input_pspecs",
            "to_shardings", "fsdp_axes", "dp_axes", "FleetMonitor",
            "FaultConfig", "plan_elastic_mesh", "resume_plan",
            "RequestEngine", "EngineResponse", "AdmissionRouter",
-           "ShardedCollection", "Shard"]
+           "ShardedCollection", "Shard", "CollectionEpoch",
+           "CollectionUpdate", "UpdateValidationError"]
 
 
 def __getattr__(name):
@@ -17,7 +18,8 @@ def __getattr__(name):
     if name in ("RequestEngine", "EngineResponse", "AdmissionRouter"):
         from . import engine
         return getattr(engine, name)
-    if name in ("ShardedCollection", "Shard"):
+    if name in ("ShardedCollection", "Shard", "CollectionEpoch",
+                "CollectionUpdate", "UpdateValidationError"):
         from . import collection
         return getattr(collection, name)
     raise AttributeError(name)

@@ -54,7 +54,8 @@ from ..core.scheduler import (ExecutionPlan, SchedulerStats, _exchange,
 from ..core.search import KoiosIndex, merge_topk
 from ..core.token_stream import (TokenStreamCache,
                                  build_token_stream_batch_cached)
-from ..core.types import SearchParams, SearchResult, SearchStats
+from ..core.types import (QueryValidationError, SearchParams, SearchResult,
+                          SearchStats, validate_query)
 from .fault import (FaultConfig, FaultPlan, FleetMonitor, ReplicaCrash,
                     TransientVerifierError)
 from .instrument import EngineCounters, RequestTrace, record
@@ -79,6 +80,7 @@ class _Request:
     arrival: float                       # visibility time (trace replay)
     seq: int                             # admission tiebreak (FIFO)
     qi: int = -1                         # plan query index once joined
+    epoch: int = -1                      # collection epoch pinned at join
     pending: List[int] = dataclasses.field(default_factory=list)
     parts: Dict[int, SearchResult] = dataclasses.field(default_factory=dict)
 
@@ -99,7 +101,14 @@ class EngineResponse:
     deadline was already unreachable (``result`` is empty); ``retried``
     = served ``ok`` after ``retries`` failover resubmissions (same
     exactness guarantee as ``ok``); ``failed`` = the retry budget ran
-    out or no healthy replica existed (``reason`` says which)."""
+    out, no healthy replica existed, the admission queue was full
+    (``overloaded``), or the query failed admission-time validation
+    (``reason`` says which).
+
+    ``epoch`` is the collection epoch the request was SERVED against
+    (pinned at join, DESIGN.md §6.5): a served response is bit-identical
+    to the one-shot path over that epoch's repository, whatever commits
+    landed while it was in flight."""
 
     rid: int
     result: SearchResult
@@ -111,6 +120,7 @@ class EngineResponse:
     status: str = "ok"                   # ok | shed | retried | failed
     retries: int = 0                     # failover resubmissions served
     reason: str = ""                     # shed/failed explanation
+    epoch: int = 0                       # collection epoch served against
 
     @property
     def served(self) -> bool:
@@ -145,8 +155,9 @@ class RequestEngine:
                  partitions: int = 1, schedule: str = "wave",
                  partition_by: str = "sets",
                  bound_exchange: Optional[Callable] = None, mesh=None,
-                 stream_cache_capacity: int = 512,
+                 stream_cache_bytes: int = 64 << 20,
                  max_wave_requests: int = 64,
+                 max_pending: Optional[int] = None,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
                  indexes: Optional[Sequence[KoiosIndex]] = None,
@@ -165,13 +176,21 @@ class RequestEngine:
                           ShardedCollection.build(coll, partitions,
                                                   by=partition_by))
         self.collection = collection
-        self.coll = collection.coll
+        # pin the epoch this engine serves: every joined request computes
+        # against this consistent snapshot until resync() (DESIGN.md §6.5)
+        self._epoch = collection.pin()
+        self.coll = self._epoch.coll
         self.bound_exchange = bound_exchange
         self.mesh = mesh
         self.clock = clock
         self._sleep = sleep
         self.max_wave_requests = int(max_wave_requests)
-        self.partitions = collection.shards
+        # bounded admission: past max_pending, submit responds
+        # status='failed' reason='overloaded' instead of growing without
+        # bound (None = unbounded — the historical behavior)
+        self.max_pending = max_pending if max_pending is None \
+            else int(max_pending)
+        self.partitions = self._epoch.shards
 
         if schedule in ("overlap", "sequential"):
             schedule = "wave"
@@ -187,9 +206,11 @@ class RequestEngine:
         self.schedule = schedule
 
         # engine-lifetime shared machinery (the cross-request reuse)
-        self.plan = ExecutionPlan(self.partitions, [], pool_coll=self.coll)
+        self.plan = ExecutionPlan(self.partitions, [], pool_coll=self.coll,
+                                  epoch=self._epoch.epoch)
         self.pool = VerifierPool(self.coll, sim_provider, self.params)
-        self.stream_cache = TokenStreamCache(stream_cache_capacity)
+        self.stream_cache = TokenStreamCache(max_bytes=stream_cache_bytes)
+        self.stream_cache.set_epoch(self._epoch.epoch)
         self.counters = EngineCounters()
 
         self._streams: List[object] = []          # aligned with plan.queries
@@ -215,6 +236,13 @@ class RequestEngine:
         self._wave_ewma = 0.0                     # smoothed wave seconds
         self._last_wave = 0                       # tiles run by last step
 
+        # ---- epoch rollout (DESIGN.md §6.5) ----
+        # standalone engines resync at the first drained step boundary
+        # after a commit; a router serializes the rollout by granting
+        # _resync_allowed to one behind replica at a time
+        self._resync_allowed = True
+        self._warm_sample: Optional[List[np.ndarray]] = None
+
     # ------------------------------------------------------------- admit
     def submit(self, query, deadline: Optional[float] = None,
                arrival: Optional[float] = None) -> int:
@@ -225,10 +253,28 @@ class RequestEngine:
         ``arrival`` defers the request's *visibility* to the engine —
         trace replay for staggered-arrival benchmarks; the admit
         timestamp is the arrival time, so queue time is measured from
-        when the request actually arrived."""
+        when the request actually arrived.
+
+        Admission is guarded (DESIGN.md §6): an invalid query (empty,
+        non-integer, negative ids, or a non-finite embedding row for an
+        in-vocab token) or a full admission queue (``max_pending``)
+        responds ``status='failed'`` with a reason — a rid is still
+        returned and the response flows through the normal channel, so
+        callers never need a second error path."""
         rid = next(self._rid)
         now = self.clock()
         t_arr = now if arrival is None else float(arrival)
+        try:
+            query = validate_query(query, self.sim)
+        except QueryValidationError as e:
+            return self._reject(rid, t_arr, now, f"invalid query: {e}",
+                                kind="invalid")
+        if self.max_pending is not None \
+                and self.pending() >= self.max_pending:
+            return self._reject(
+                rid, t_arr, now,
+                f"overloaded (admission queue at max_pending="
+                f"{self.max_pending})", kind="overloaded")
         req = _Request(
             rid=rid, query=np.asarray(query, np.int32),
             trace=RequestTrace(rid=rid, t_admit=t_arr, deadline=deadline),
@@ -238,6 +284,25 @@ class RequestEngine:
             self._arrivals.sort(key=lambda r: (r.arrival, r.seq))
         else:
             self._queue.append(req)
+        return rid
+
+    def _reject(self, rid: int, t_arr: float, now: float, reason: str,
+                kind: str) -> int:
+        """Refuse admission with an explicit ``failed`` response (never
+        an exception, never a silent drop, never a garbage top-k)."""
+        trace = RequestTrace(rid=rid, t_admit=t_arr, status="failed")
+        trace.t_respond = now
+        record(f"engine:{kind}")
+        if kind == "overloaded":
+            self.counters.observe_overload()
+        else:
+            self.counters.observe_invalid()
+        self.counters.observe_respond(trace)
+        self._completed.append(EngineResponse(
+            rid=rid, result=_void_result(),
+            latency_s=max(now - t_arr, 0.0), queue_s=0.0, waves=0,
+            stream_hit=False, deadline_met=None, status="failed",
+            reason=reason, epoch=self._epoch.epoch))
         return rid
 
     def _admit_arrived(self, now: float) -> None:
@@ -274,6 +339,7 @@ class RequestEngine:
         self._theta.extend([0.0] * len(joiners))
         for req, qi, hit in zip(joiners, qis, hits):
             req.qi = qi
+            req.epoch = self._epoch.epoch
             req.pending = list(range(len(self.partitions)))
             req.trace.t_stream = t_stream
             req.trace.stream_hit = bool(hit)
@@ -327,7 +393,18 @@ class RequestEngine:
         if self.shed_deadlines:
             self._shed_pass(now)
         depth = len(self._queue)
-        self._join(now)
+        # epoch rollout (DESIGN.md §6.5): behind the head epoch, the
+        # in-flight cohort drains on its pinned snapshot and NO new
+        # request joins — new admissions must see the committed epoch.
+        # Resync happens at the first drained step boundary (immediately
+        # for a standalone engine; when the router grants the rollout
+        # slot for a fleet replica).
+        if self.epoch_behind():
+            if not self._inflight and self._resync_allowed:
+                self.resync()
+                self._join(now)
+        else:
+            self._join(now)
         if not self._inflight:
             self._heartbeat(t_enter)
             out, self._completed = self._completed, []
@@ -366,7 +443,45 @@ class RequestEngine:
     def _heartbeat(self, t_enter: float) -> None:
         if self.monitor is not None:
             self.monitor.heartbeat(self.replica_id, self._step_no,
-                                   self.clock() - t_enter)
+                                   self.clock() - t_enter,
+                                   epoch=self._epoch.epoch)
+
+    # -------------------------------------------------------------- epoch
+    @property
+    def epoch(self) -> int:
+        """The collection epoch this engine currently serves."""
+        return self._epoch.epoch
+
+    def epoch_behind(self) -> bool:
+        """True when a commit installed a newer head epoch than the one
+        this engine has pinned."""
+        return self._epoch is not self.collection.head
+
+    def resync(self) -> None:
+        """Re-pin the head epoch at a step boundary: rebuild the plan /
+        verifier pool over the new shard list, invalidate the stream
+        cache's epoch key, release the old epoch's reader reference
+        (the LAST reader out frees its exclusive device buffers), and
+        re-warm the shard-local wave-config grid so the rollout does not
+        recompile mid-traffic.  Requires a drained wave cohort — pinned
+        in-flight requests NEVER migrate epochs (their bit-exactness is
+        against the admission snapshot); queued requests join the new
+        epoch on the very next step."""
+        assert not self._inflight, "resync requires a drained wave cohort"
+        old = self._epoch
+        self._epoch = self.collection.pin()
+        self.coll = self._epoch.coll
+        self.partitions = self._epoch.shards
+        self._streams, self._theta, self._tiles = [], [], {}
+        self.plan = ExecutionPlan(self.partitions, [], pool_coll=self.coll,
+                                  epoch=self._epoch.epoch)
+        self.pool = VerifierPool(self.coll, self.sim, self.params)
+        self.stream_cache.set_epoch(self._epoch.epoch)
+        self.collection.release(old)
+        record("engine:resync")
+        self.counters.observe_resync()
+        if self._warm_sample is not None:
+            self._warmup_wave_grid(self._warm_sample)
 
     # ----------------------------------------------------------- shedding
     def _deadline_unreachable(self, req: _Request, now: float,
@@ -410,7 +525,8 @@ class RequestEngine:
             waves=req.trace.waves, stream_hit=req.trace.stream_hit,
             deadline_met=False, status="shed",
             reason=f"deadline unreachable (estimate {est:.4f}s, "
-                   f"deadline {req.trace.deadline - now:+.4f}s away)"))
+                   f"deadline {req.trace.deadline - now:+.4f}s away)",
+            epoch=req.epoch if joined else self._epoch.epoch))
         if joined:
             self._retire(req)
 
@@ -424,7 +540,7 @@ class RequestEngine:
             rid=req.rid, result=result,
             latency_s=req.trace.latency_s, queue_s=req.trace.queue_s,
             waves=req.trace.waves, stream_hit=req.trace.stream_hit,
-            deadline_met=req.trace.deadline_met))
+            deadline_met=req.trace.deadline_met, epoch=req.epoch))
         self._retire(req)
 
     def _retire(self, req: _Request) -> None:
@@ -465,7 +581,8 @@ class RequestEngine:
         self._arrivals, self._queue = [], []
         self._inflight, self._tiles = {}, {}
         self._streams, self._theta = [], []
-        self.plan = ExecutionPlan(self.partitions, [], pool_coll=self.coll)
+        self.plan = ExecutionPlan(self.partitions, [], pool_coll=self.coll,
+                                  epoch=self._epoch.epoch)
         return done, specs
 
     # ------------------------------------------------------------- warmup
@@ -486,6 +603,9 @@ class RequestEngine:
         metrics (the stream cache keeps its entries — that is warmup
         working as intended)."""
         sample = [np.asarray(q, np.int32) for q in sample]
+        # kept for post-resync re-warm: a rollout re-sweeps the new
+        # epoch's shard-local wave grid with the same sample
+        self._warm_sample = sample if sample else None
         if sample:
             bs = 1
             while True:
@@ -604,6 +724,7 @@ class RequestEngine:
         """Engine metrics incl. stream-cache and scheduler stats."""
         out = self.counters.summary(cache_stats=self.stream_cache.stats())
         out["schedule"] = self.schedule
+        out["epoch"] = self.epoch
         out["scheduler"] = {
             "waves": self.plan.stats.waves,
             "rounds": self.plan.stats.rounds,
@@ -805,11 +926,39 @@ class AdmissionRouter:
         for ei in [ei for ei, q in self._quarantined.items()
                    if q["revivable"]
                    and now - q["t"] >= self.policy.revive_after_s]:
+            eng = self.engines[ei]
+            if eng.epoch_behind():
+                # a commit landed while the replica sat in quarantine:
+                # it MUST resync to the head epoch before readmission
+                # (its request state was evacuated, so the cohort is
+                # drained by construction)
+                eng.resync()
+                record("router:revive_resync")
             del self._quarantined[ei]
             self.monitor.restore(ei)
             self.quarantine_log.append({"t": now, "replica": ei,
                                         "reason": "revived",
                                         "revivable": True})
+
+    # ------------------------------------------------------- epoch rollout
+    def _grant_rollout(self) -> None:
+        """Serialize the epoch rollout replica-by-replica (DESIGN.md
+        §6.5): exactly ONE behind healthy replica holds the resync grant
+        at a time, so the fleet never loses more than one replica's
+        serving capacity to a rebuild.  Behind replicas without the
+        grant keep draining their pinned in-flight cohort but admit no
+        new joins (new admissions must see the committed epoch).  The
+        grantee with a drained cohort resyncs HERE — it may have no
+        pending work, in which case the step loop would never reach
+        it."""
+        behind = [ei for ei in self.healthy()
+                  if self.engines[ei].epoch_behind()]
+        lead = behind[0] if behind else -1
+        for ei in self.healthy():
+            self.engines[ei]._resync_allowed = (not behind) or ei == lead
+        if lead >= 0 and not self.engines[lead]._inflight:
+            self.engines[lead].resync()
+            record("router:rollout")
 
     # --------------------------------------------------------------- drive
     def pending(self) -> int:
@@ -823,10 +972,15 @@ class AdmissionRouter:
         responses come back with global rids, failures as ``failed``
         responses."""
         self._maybe_revive()
+        self._grant_rollout()
         out: List[EngineResponse] = []
         timeout = self.monitor.cfg.heartbeat_timeout
         for ei, eng in enumerate(self.engines):
-            if ei in self._quarantined or not eng.pending():
+            # _completed counts too: a failed-at-submit response (over-
+            # load / validation) buffers without ever becoming pending,
+            # and only a step() flushes it
+            if ei in self._quarantined \
+                    or not (eng.pending() or eng._completed):
                 continue
             t0 = self.clock()
             try:
@@ -913,6 +1067,8 @@ class AdmissionRouter:
         return {
             "replicas": len(self.engines),
             "healthy_replicas": len(self.healthy()),
+            "epoch": self.collection.epoch,
+            "replica_epochs": [e.epoch for e in self.engines],
             "collection": self.collection.describe(),
             "requests": sum(p["requests"] for p in per),
             "shed": sum(p["shed"] for p in per),

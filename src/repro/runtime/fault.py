@@ -34,6 +34,7 @@ class HostState:
     last_step: int
     step_latency: float = 0.0
     healthy: bool = True
+    epoch: int = -1                # collection epoch served (-1 = unknown)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,11 +56,17 @@ class FleetMonitor:
             h: HostState(h, clock(), -1) for h in range(num_hosts)}
         self._strag_count: Dict[int, int] = {h: 0 for h in range(num_hosts)}
 
-    def heartbeat(self, host_id: int, step: int, step_latency: float):
+    def heartbeat(self, host_id: int, step: int, step_latency: float,
+                  epoch: Optional[int] = None):
+        """``epoch`` (optional — training-substrate callers don't serve a
+        collection) reports which collection epoch the host serves, so
+        the rollout's progress is visible in the health plane."""
         hs = self.hosts[host_id]
         hs.last_heartbeat = self.clock()
         hs.last_step = step
         hs.step_latency = step_latency
+        if epoch is not None:
+            hs.epoch = int(epoch)
 
     def failed_hosts(self) -> List[int]:
         now = self.clock()

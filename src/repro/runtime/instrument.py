@@ -68,7 +68,7 @@ class RequestTrace:
     stream_hit: bool = False
     waves: int = 0                 # waves the request participated in
     deadline: Optional[float] = None
-    status: str = "ok"             # 'ok' | 'shed' (engine-level outcome)
+    status: str = "ok"             # 'ok' | 'shed' | 'failed'
 
     @property
     def latency_s(self) -> float:
@@ -103,6 +103,9 @@ class EngineCounters:
         self.queue_depth: List[int] = []
         self.wave_sizes: List[int] = []
         self.steps = 0
+        self.overloaded = 0        # refused: admission queue full
+        self.invalid = 0           # refused: failed query validation
+        self.resyncs = 0           # epoch resyncs performed
 
     def observe_step(self, queue_depth: int, wave_size: int) -> None:
         self.steps += 1
@@ -111,6 +114,15 @@ class EngineCounters:
 
     def observe_respond(self, trace: RequestTrace) -> None:
         self.traces.append(trace)
+
+    def observe_overload(self) -> None:
+        self.overloaded += 1
+
+    def observe_invalid(self) -> None:
+        self.invalid += 1
+
+    def observe_resync(self) -> None:
+        self.resyncs += 1
 
     def summary(self, cache_stats: Optional[dict] = None) -> dict:
         """Deadline accounting rides along (DESIGN.md §6): latency
@@ -126,6 +138,10 @@ class EngineCounters:
             "requests": len(self.traces),
             "served": len(served),
             "shed": sum(t.status == "shed" for t in self.traces),
+            "failed": sum(t.status == "failed" for t in self.traces),
+            "overloaded": self.overloaded,
+            "invalid": self.invalid,
+            "resyncs": self.resyncs,
             "steps": self.steps,
             "mean_latency_s": sum(lats) / len(lats) if lats else 0.0,
             "p50_latency_s": _quantile(lats, 0.50),

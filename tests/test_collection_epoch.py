@@ -1,0 +1,391 @@
+"""Crash-consistent live collection (DESIGN.md §6.5): copy-on-write
+epoch commits, epoch pinning for in-flight requests, write-payloads →
+install-manifest snapshot atomicity (restore sees old OR new, never a
+torn mix), corruption refusal, quarantine→revive→resync ordering, and
+the admission guards (bounded queue + query validation)."""
+import glob
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CollectionSnapshotter, SnapshotCorruptionError
+from repro.checkpoint.checkpoint import restore as load_tree
+from repro.checkpoint.checkpoint import save as save_tree
+from repro.core import (KoiosSearch, QueryValidationError, SearchParams,
+                        validate_query)
+from repro.core.similarity import EmbeddingSimilarity
+from repro.data import make_embeddings, sample_queries
+from repro.runtime import instrument
+from repro.runtime.collection import (ShardedCollection,
+                                      UpdateValidationError,
+                                      _coll_from_sets)
+from repro.runtime.engine import (AdmissionRouter, RequestEngine,
+                                  RouterPolicy)
+from repro.runtime.fault import FaultEvent, FaultPlan
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _drop_module_jit_residue():
+    """This module compiles engine/search programs over many bespoke
+    collections (per-epoch shard splits, restored snapshots) that no
+    other module reuses.  Drop them from jax's process-global executable
+    caches on the way out: the accumulated native compiler state has
+    been observed to destabilize later XLA CPU compilations in a long
+    single-process suite run (segfault in backend_compile), and
+    downstream modules recompile their own shapes anyway."""
+    yield
+    import jax
+
+    jax.clear_caches()
+
+
+def _params():
+    return SearchParams(k=5, alpha=0.8, chunk_size=64, verify_batch=8)
+
+
+def _fake_clock():
+    t = [1000.0]
+    return (lambda: t[0],                       # now
+            lambda dt: t.__setitem__(0, t[0] + dt),   # advance
+            lambda dt: t.__setitem__(0, t[0] + dt))   # sleep
+
+
+def _bitwise(a, b):
+    assert np.array_equal(a.ids, b.ids)
+    assert np.array_equal(a.lb, b.lb)
+
+
+# ----------------------------------------------------- copy-on-write commit
+def test_cow_commit_shares_unchanged_shards(small_world):
+    """A commit touching the first and last shard rebuilds exactly those
+    two; the middle shard's index/device state is shared BY REFERENCE
+    into the new epoch, and the committed head serves bit-identically to
+    a from-scratch build over the same logical contents."""
+    coll, sim = small_world
+    sc = ShardedCollection.build(coll, 3)
+    base_invs = [id(s.inv) for s in sc.shards]
+
+    added = [coll.get_set(5).copy(), coll.get_set(9).copy()]
+    u = sc.begin_update()
+    u.remove_sets([0])            # first shard rebuilds
+    u.add_sets(added)             # last shard rebuilds
+    assert u.commit() == 1
+    assert sc.epoch == 1
+    assert sc._last_commit["shards_shared"] == 1
+    assert sc._last_commit["shards_rebuilt"] == 2
+    assert id(sc.shards[1].inv) == base_invs[1]      # shared, not copied
+    assert id(sc.shards[0].inv) != base_invs[0]
+    assert id(sc.shards[2].inv) != base_invs[2]
+
+    # logical contents: every old set except 0 (order kept), adds at end
+    expected = [coll.get_set(i) for i in range(1, coll.num_sets)] + added
+    assert sc.coll.num_sets == len(expected)
+    for i, ts in enumerate(expected):
+        assert np.array_equal(np.sort(sc.coll.get_set(i)), np.sort(ts))
+
+    # bit-parity vs a fresh build (different shard split on purpose)
+    fresh = ShardedCollection.build(
+        _coll_from_sets(expected, coll.vocab_size), 2)
+    params = _params()
+    queries = sample_queries(coll, 4, seed=81)
+    a = KoiosSearch(None, sim, params, collection=sc).search_batch(queries)
+    b = KoiosSearch(None, sim, params,
+                    collection=fresh).search_batch(queries)
+    for x, y in zip(a, b):
+        _bitwise(x, y)
+
+
+def test_update_transaction_guards(small_world):
+    """One open transaction at a time; staged data is validated at the
+    staging call (empty set, OOV token, duplicate tokens, bad global id);
+    abort reopens; a no-op commit keeps the epoch; a closed transaction
+    refuses further use."""
+    coll, _ = small_world
+    sc = ShardedCollection.build(coll, 2)
+    u = sc.begin_update()
+    with pytest.raises(UpdateValidationError):
+        sc.begin_update()                      # single-transaction guard
+    with pytest.raises(UpdateValidationError):
+        u.add_sets([np.array([], np.int64)])   # empty set
+    with pytest.raises(UpdateValidationError):
+        u.add_sets([np.array([coll.vocab_size + 1])])     # OOV token
+    with pytest.raises(UpdateValidationError):
+        u.add_sets([np.array([3, 3])])         # duplicate tokens
+    with pytest.raises(UpdateValidationError):
+        u.remove_sets([coll.num_sets + 5])     # bad global id
+    u.abort()
+
+    u2 = sc.begin_update()
+    assert u2.commit() == 0                    # no-op keeps the epoch
+    assert sc.epoch == 0
+    with pytest.raises(UpdateValidationError):
+        u2.add_sets([coll.get_set(0).copy()])  # closed transaction
+
+
+def test_reader_drain_releases_old_epoch(small_world):
+    """An old epoch (and its rebuilt shards' device/index state) stays
+    retained while any reader pins it, and is released — with its
+    ``collection:epoch_release`` audit events — when the last reader
+    drains.  Shards shared into the head are never dropped."""
+    coll, _ = small_world
+    sc = ShardedCollection.build(coll, 2)
+    ep0 = sc.pin()
+    u = sc.begin_update()
+    u.remove_sets([0])                         # shard 0 rebuilds,
+    assert u.commit() == 1                     # shard 1 is shared
+
+    d = sc.describe()
+    assert d["retained_epochs"] == [0, 1]      # the reader pins epoch 0
+    assert d["pinned_readers"] == {0: 1}
+
+    with instrument.counting() as events:
+        sc.release(ep0)
+    d = sc.describe()
+    assert d["retained_epochs"] == [1]
+    assert not d["pinned_readers"]
+    # exactly the REBUILT shard's old state is released; the shared
+    # shard lives on in the head
+    assert events.get("collection:epoch_release[s0]") == 1
+    assert "collection:epoch_release[s1]" not in events
+
+
+# --------------------------------------------- epoch pinning in the engine
+def test_inflight_pinned_epoch_then_resync(small_world):
+    """The serving contract across a live commit: requests admitted
+    before the commit complete bit-identical to the OLD epoch's one-shot
+    reference (their plan never migrates); once drained the standalone
+    engine resyncs to the head — new admissions see the new sets and the
+    stream cache keys by the new epoch (no stale hits)."""
+    coll, sim = small_world
+    params = _params()
+    sc = ShardedCollection.build(coll, 2)
+    queries = sample_queries(coll, 6, seed=82)
+    ref_old = KoiosSearch(None, sim, params,
+                          collection=sc).search_batch(queries)
+
+    eng = RequestEngine(None, sim, params, collection=sc)
+    for q in queries:
+        eng.submit(q)
+    out = eng.step()                           # admit; waves in flight
+
+    victim = int(ref_old[0].ids[0])            # removing rid 0's top-1
+    u = sc.begin_update()                      # guarantees a visible diff
+    u.remove_sets([victim])
+    u.add_sets([coll.get_set(2).copy()])
+    assert u.commit() == 1
+    assert eng.epoch == 0 and eng.epoch_behind()
+
+    while eng.pending():                       # drain the pinned cohort
+        out.extend(eng.step())
+    assert sorted(r.rid for r in out) == list(range(len(queries)))
+    assert all(r.epoch == 0 for r in out)      # pre-commit admissions
+    for r in out:                              # ... serve the OLD epoch
+        _bitwise(r.result, ref_old[r.rid])
+
+    eng.step()                                 # drained -> resync
+    assert eng.epoch == 1 and not eng.epoch_behind()
+    assert eng.stream_cache.stats()["epoch"] == 1
+    assert eng.counters.summary()["resyncs"] == 1
+
+    ref_new = KoiosSearch(None, sim, params,
+                          collection=sc).search_batch(queries)
+    assert not np.array_equal(ref_old[0].ids, ref_new[0].ids)
+    base = len(queries)
+    for q in queries:
+        eng.submit(q)
+    out2 = []
+    while eng.pending():
+        out2.extend(eng.step())
+    assert all(r.epoch == 1 for r in out2)     # post-commit admissions
+    for r in out2:                             # ... serve the NEW epoch
+        _bitwise(r.result, ref_new[r.rid - base])
+
+
+def test_quarantine_revive_resyncs_before_readmission(small_world):
+    """A commit lands while a replica sits in quarantine: the revive
+    path MUST resync it to the head epoch before readmission (audited by
+    ``router:revive_resync``), and the whole fleet then serves the new
+    epoch bit-identically to its one-shot reference."""
+    coll, sim = small_world
+    params = _params()
+    sc = ShardedCollection.build(coll, 2)
+    queries = sample_queries(coll, 4, seed=84)
+
+    clock, advance, sleep = _fake_clock()
+    plan = FaultPlan([FaultEvent("verify_error", 0, 1)])
+    router = AdmissionRouter(None, sim, params, replicas=2, collection=sc,
+                             policy=RouterPolicy(revive_after_s=0.1),
+                             fault_plan=plan, clock=clock, sleep=sleep)
+    resp = router.serve(queries)
+    assert any(r.status == "retried" for r in resp)
+    assert 0 in router._quarantined            # still cooling down
+
+    victim = int(resp[0].result.ids[0])
+    u = sc.begin_update()
+    u.remove_sets([victim])
+    u.add_sets([coll.get_set(1).copy()])
+    assert u.commit() == 1
+
+    advance(0.2)                               # past the cooldown
+    with instrument.counting() as events:
+        router.step()                          # revive + rollout pass
+    assert events.get("router:revive_resync") == 1
+    assert all(e.epoch == 1 for e in router.engines)
+    assert router.summary()["replica_epochs"] == [1, 1]
+
+    ref_new = KoiosSearch(None, sim, params,
+                          collection=sc).search_batch(queries)
+    assert not np.array_equal(resp[0].result.ids, ref_new[0].ids)
+    again = router.serve(queries)
+    assert all(r.status == "ok" for r in again)
+    assert all(r.epoch == 1 for r in again)
+    for r, a in zip(again, ref_new):           # gids keep counting up —
+        _bitwise(r.result, a)                  # compare by position
+
+
+# ------------------------------------------------------- admission guards
+def test_bounded_admission_queue_overload(small_world):
+    """Beyond ``max_pending`` the engine refuses admission with an
+    explicit ``failed``/overloaded response (counted in EngineCounters)
+    instead of growing without bound; admitted requests are unaffected."""
+    coll, sim = small_world
+    params = _params()
+    queries = sample_queries(coll, 5, seed=85)
+    ref = KoiosSearch(coll, sim, params,
+                      partitions=2).search_batch(queries)
+
+    eng = RequestEngine(coll, sim, params, partitions=2, max_pending=2)
+    rids = [eng.submit(q) for q in queries]
+    assert rids == list(range(5))              # a rid is ALWAYS returned
+    out = []
+    while eng.pending():
+        out.extend(eng.step())
+    out.extend(eng.step())                     # flush buffered rejects
+
+    failed = sorted((r for r in out if r.status == "failed"),
+                    key=lambda r: r.rid)
+    assert [r.rid for r in failed] == [2, 3, 4]
+    assert all("overloaded" in r.reason for r in failed)
+    assert all(r.waves == 0 for r in failed)   # refused BEFORE any work
+    ok = sorted((r for r in out if r.status == "ok"), key=lambda r: r.rid)
+    assert [r.rid for r in ok] == [0, 1]
+    for r in ok:
+        _bitwise(r.result, ref[r.rid])
+    s = eng.counters.summary()
+    assert s["overloaded"] == 3 and s["failed"] == 3
+
+
+def test_admission_validation(small_world):
+    """Admission-time validation: empty / negative / non-integer queries
+    and non-finite embedding rows for in-vocab tokens are refused with a
+    typed error at ``search_batch`` and a ``failed`` response at
+    ``submit`` — never a garbage top-k.  OOV ids stay legal (the
+    identity-pair rule gives them sim 1.0 with themselves only)."""
+    coll, sim = small_world
+    with pytest.raises(QueryValidationError):
+        validate_query(np.array([], np.int32), sim)
+    with pytest.raises(QueryValidationError):
+        validate_query(np.array([-1, 2]), sim)
+    with pytest.raises(QueryValidationError):
+        validate_query(np.array([0.5, 2.0]), sim)
+    q = validate_query(np.array([coll.vocab_size + 5, 1]), sim)
+    assert q.dtype == np.int32                 # OOV ids are legal
+
+    emb = make_embeddings(coll.vocab_size, dim=16, cluster_size=4.0,
+                          seed=9)
+    emb[7] = np.nan                            # poisoned embedding row
+    with pytest.raises(QueryValidationError):
+        validate_query(np.array([7, 1]), EmbeddingSimilarity(emb))
+    # ...but only for tokens the query actually touches
+    validate_query(np.array([6, 1]), EmbeddingSimilarity(emb))
+
+    with pytest.raises(QueryValidationError):
+        KoiosSearch(coll, sim, _params()).search_batch(
+            [np.array([], np.int32)])
+
+    eng = RequestEngine(coll, sim, _params(), partitions=1)
+    rid = eng.submit(np.array([], np.int32))
+    (r,) = eng.step()
+    assert r.rid == rid and r.status == "failed"
+    assert "invalid" in r.reason
+    assert eng.counters.summary()["invalid"] == 1
+
+
+# --------------------------------------------------- snapshot consistency
+def test_snapshot_save_restore_roundtrip(tmp_path, small_world):
+    """Save → restore reproduces the committed head bit-for-bit: same
+    epoch, same shard split, same CSR, bit-identical serving."""
+    coll, sim = small_world
+    sc = ShardedCollection.build(coll, 2)
+    u = sc.begin_update()
+    u.remove_sets([3])
+    u.add_sets([coll.get_set(1).copy()])
+    assert u.commit() == 1
+    sc.save(str(tmp_path))
+
+    rest = ShardedCollection.restore(str(tmp_path))
+    assert rest is not None and rest.epoch == 1
+    assert rest.num_shards == sc.num_shards
+    assert rest.shard_ranges() == sc.shard_ranges()
+    assert np.array_equal(rest.coll.set_indptr, sc.coll.set_indptr)
+    assert np.array_equal(rest.coll.set_tokens, sc.coll.set_tokens)
+
+    params = _params()
+    queries = sample_queries(coll, 3, seed=83)
+    a = KoiosSearch(None, sim, params, collection=sc).search_batch(queries)
+    b = KoiosSearch(None, sim, params,
+                    collection=rest).search_batch(queries)
+    for x, y in zip(a, b):
+        _bitwise(x, y)
+
+    # no snapshot -> a clean None, not an exception
+    assert ShardedCollection.restore(str(tmp_path / "nowhere")) is None
+
+
+def test_crash_mid_commit_restores_old_or_new(tmp_path, small_world):
+    """The atomicity contract: payloads land first, the manifest rename
+    is the commit point.  A crash BETWEEN the two phases restores the
+    OLD epoch intact; after the rename, restore sees the NEW epoch —
+    never a torn mix of the two."""
+    coll, _ = small_world
+    sc = ShardedCollection.build(coll, 2)
+    snap = CollectionSnapshotter(str(tmp_path))
+    snap.save(sc)                              # epoch 0 durable
+
+    u = sc.begin_update()
+    u.remove_sets([0])
+    u.add_sets([coll.get_set(4).copy()])
+    assert u.commit() == 1
+
+    # phase 1 only: the new payloads are on disk, the manifest is not —
+    # exactly the state a crash mid-save leaves behind
+    manifest = snap._write_payloads(sc.head)
+    rest = snap.restore()
+    assert rest.epoch == 0                     # old epoch, fully intact
+    assert rest.coll.num_sets == coll.num_sets
+    assert np.array_equal(rest.coll.set_tokens, coll.set_tokens)
+
+    # phase 2: one atomic rename flips restore to the new epoch
+    snap._install_manifest(manifest)
+    snap._gc(manifest)
+    rest = snap.restore()
+    assert rest.epoch == 1
+    assert rest.coll.num_sets == sc.coll.num_sets
+    assert np.array_equal(rest.coll.set_tokens, sc.coll.set_tokens)
+
+
+def test_corrupted_payload_refuses_restore(tmp_path, small_world):
+    """Every payload is re-hashed against its manifest sha on restore:
+    a single flipped token raises SnapshotCorruptionError instead of
+    silently serving wrong top-k."""
+    coll, _ = small_world
+    ShardedCollection.build(coll, 2).save(str(tmp_path))
+
+    victim = sorted(glob.glob(str(tmp_path / "shard_*.msgpack")))[0]
+    tree = load_tree(victim)
+    tree["set_tokens"] = np.asarray(tree["set_tokens"], np.int32).copy()
+    tree["set_tokens"][0] ^= 1                 # one bit of payload rot
+    save_tree(victim, tree)
+
+    with pytest.raises(SnapshotCorruptionError, match="hash mismatch"):
+        ShardedCollection.restore(str(tmp_path))

@@ -105,7 +105,7 @@ def test_stream_cache_hit_parity(small_world):
     alpha = 0.8
     ref = build_token_stream_batch(queries, sim, alpha)
 
-    cache = TokenStreamCache(capacity=16)
+    cache = TokenStreamCache()
     miss = build_token_stream_batch_cached(queries, sim, alpha, cache)
     hit = build_token_stream_batch_cached(queries, sim, alpha, cache)
     dup = build_token_stream_batch_cached(
@@ -129,23 +129,30 @@ def test_stream_cache_hit_parity(small_world):
 
 
 def test_stream_cache_eviction_lru(small_world):
-    """Capacity bounds the cache; the LRU entry is evicted first and an
-    evicted key rebuilds (miss) to a bit-identical stream."""
+    """The byte budget bounds the cache; the LRU entry is evicted first
+    and an evicted key rebuilds (miss) to a bit-identical stream."""
     coll, sim = small_world
     q = sample_queries(coll, 3, seed=9)
     alpha = 0.8
-    cache = TokenStreamCache(capacity=2)
+    probe = TokenStreamCache()
+    streams = build_token_stream_batch_cached(q, sim, alpha, probe)
+    sizes = [TokenStreamCache._nbytes(s) for s in streams]
+    # budget holds any two of the three streams but never all three
+    cache = TokenStreamCache(max_bytes=sum(sizes) - min(sizes) // 2 - 1)
     k0 = cache.key(q[0], alpha, sim)
 
     build_token_stream_batch_cached([q[0], q[1]], sim, alpha, cache)
     ref0 = build_token_stream_batch(q[:1], sim, alpha)[0]
     assert cache.contains(k0) and len(cache) == 2
+    assert cache.bytes == sizes[0] + sizes[1] <= cache.max_bytes
 
     build_token_stream_batch_cached([q[1]], sim, alpha, cache)  # q0 -> LRU
     build_token_stream_batch_cached([q[2]], sim, alpha, cache)  # evicts q0
     assert cache.evictions == 1
     assert not cache.contains(k0)
     assert len(cache) == 2
+    assert cache.bytes == sizes[1] + sizes[2]
+    assert cache.describe()["bytes"] == cache.bytes
 
     misses = cache.misses
     rebuilt = build_token_stream_batch_cached([q[0]], sim, alpha, cache)
